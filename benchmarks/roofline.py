@@ -1,0 +1,111 @@
+"""§Roofline — aggregate the dry-run artifacts into the roofline table.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits,
+per (arch x shape) on the single-pod mesh: the three terms, the dominant
+bottleneck, MODEL/HLO FLOPs ratio, and a one-line recommendation. Markdown
+written to results/roofline.md for EXPERIMENTS.md inclusion.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_line, save_result
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def _recommendation(rec: dict) -> str:
+    r = rec["roofline"]
+    p = rec["profile"]
+    b = r["bottleneck"]
+    if b == "memory_s":
+        if p["remat_dot_flops"] > 0.3 * max(p["dot_flops"], 1):
+            return "attention-scores HBM traffic + remat dominate: Pallas flash kernel / dots-saveable remat"
+        return "HBM traffic dominates: fuse attention (Pallas flash), cut f32 intermediates"
+    if b == "collective_s":
+        if rec.get("strategy") == "megatron":
+            return "SP all-gathers dominate: smaller TP degree / fsdp strategy / comm-compute overlap"
+        return "collectives dominate: overlap or reshard"
+    return "compute-bound: near roofline; raise MXU utilization (bigger tiles)"
+
+
+def load_cells(multi_pod: bool = False) -> list[dict]:
+    suffix = "multipod" if multi_pod else "singlepod"
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if name.endswith(f"{suffix}.json"):
+            with open(os.path.join(DRYRUN_DIR, name)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def table_markdown(cells: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL/HLO flops | roofline frac | mem/dev GiB | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in cells:
+        if rec["status"] == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped | — | — | — | "
+                f"{rec['reason'][:70]} |"
+            )
+            continue
+        if rec["status"] != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | FAILED | — | — | — | "
+                f"{rec['error'][:70]} |"
+            )
+            continue
+        r = rec["roofline"]
+        m = rec["memory_analysis"]
+        mem_dev = (m.get("argument_size_in_bytes", 0)
+                   + m.get("temp_size_in_bytes", 0)) / 2**30
+        frac = r.get("memory_roofline_fraction", r.get("roofline_fraction", 0.0))
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck'][:-2]} | {r.get('model_to_hlo_flops', 0):.2f} | "
+            f"{frac:.3f} | {mem_dev:.2f} | {_recommendation(rec)[:80]} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> list[str]:
+    single = load_cells(False)
+    multi = load_cells(True)
+    md = ["# Roofline table — single-pod 16x16 (256 x TPU v5e)", "",
+          table_markdown(single), ""]
+    if multi:
+        md += ["# Multi-pod 2x16x16 (512 chips) — DCN split", "",
+               table_markdown(multi), ""]
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("\n".join(md))
+
+    ok = [c for c in single if c["status"] == "ok"]
+    failed = [c for c in single if c["status"] == "failed"]
+    bottlenecks: dict[str, int] = {}
+    for c in ok:
+        b = c["roofline"]["bottleneck"]
+        bottlenecks[b] = bottlenecks.get(b, 0) + 1
+    save_result("roofline_summary", {
+        "cells_ok": len(ok), "cells_failed": len(failed),
+        "bottlenecks": bottlenecks,
+        "multi_pod_ok": sum(1 for c in multi if c["status"] == "ok"),
+    })
+    return [
+        csv_line("roofline_cells", 0.0,
+                 f"ok={len(ok)} failed={len(failed)} "
+                 f"multipod_ok={sum(1 for c in multi if c['status'] == 'ok')} "
+                 f"bottlenecks={bottlenecks}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

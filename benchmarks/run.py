@@ -1,0 +1,39 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  table1_*    runtime overhead of monitor vs tracer   (paper Table 1)
+  table2_*    post-processing resources               (paper Table 2)
+  tables67_*  weak/strong scaling-efficiency tables   (paper Tables 6/7)
+  figure7_*   regression detect + explain             (paper Figure 7)
+  roofline_*  §Roofline aggregation from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import overhead, postprocessing, regression, roofline, scaling_tables
+
+    lines: list[str] = []
+    failures = 0
+    for mod in (overhead, postprocessing, scaling_tables, regression, roofline):
+        name = mod.__name__.split(".")[-1]
+        try:
+            lines += mod.main()
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            lines.append(f"{name},0.0,FAILED:{type(e).__name__}:{e}")
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

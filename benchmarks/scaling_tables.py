@@ -1,0 +1,101 @@
+"""Paper Tables 6/7 — weak and strong scaling-efficiency tables from REAL
+multi-device executions of the mini-app.
+
+Runs the reduced-config training job in subprocesses with 1/2/4 forced host
+devices (the only way to change the device count after jax init), collects
+the TALP JSONs, and builds both tables. The weak run scales the global batch
+with devices; the strong run keeps it fixed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import csv_line, save_result
+from repro.core import build_table, render_text, scan
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import sys
+sys.path.insert(0, {src!r})
+import jax
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.train import TrainConfig
+
+cfg = smoke_config("tinyllama-1.1b")
+data = SyntheticLM(DataConfig(global_batch={batch}, seq_len=64,
+                              vocab=cfg.vocab, pad_fraction=0.1))
+loop = TrainLoop(cfg, make_host_mesh(), TrainConfig(), data,
+                 LoopConfig(steps={steps}, lb_sample_every=1,
+                            monitor_app_name="miniapp"))
+loop.run()
+run = loop.finalize_run()
+run.save({out!r})
+print("done", run.resources.label)
+"""
+
+
+def _run_config(ndev: int, batch: int, steps: int, out: str) -> None:
+    code = _WORKER.format(
+        ndev=ndev, batch=batch, steps=steps, out=out,
+        src=os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"worker {ndev}dev failed:\n{r.stderr[-3000:]}")
+
+
+def run(root: str = "/tmp/repro_scaling", steps: int = 10) -> dict:
+    shutil.rmtree(root, ignore_errors=True)
+    for ndev in (1, 2, 4):
+        _run_config(ndev, batch=8, steps=steps,
+                    out=os.path.join(root, "strong_scaling", f"talp_1x{ndev}.json"))
+        _run_config(ndev, batch=4 * ndev, steps=steps,
+                    out=os.path.join(root, "weak_scaling", f"talp_1x{ndev}.json"))
+
+    tables = {}
+    text = {}
+    for exp in scan(root):
+        kind = "strong" if "strong" in exp.rel_path else "weak"
+        table = build_table(exp.runs)
+        tables[kind] = table
+        text[kind] = render_text(table)
+
+    result = {
+        "strong_mode_detected": tables["strong"].mode,
+        "weak_mode_detected": tables["weak"].mode,
+        "strong_table": tables["strong"].to_json(),
+        "weak_table": tables["weak"].to_json(),
+        "strong_text": text["strong"],
+        "weak_text": text["weak"],
+    }
+    save_result("tables67_scaling", result)
+    return result
+
+
+def main() -> list[str]:
+    r = run()
+    print(r["strong_text"])
+    print()
+    print(r["weak_text"])
+    ok_modes = (r["strong_mode_detected"] == "strong"
+                and r["weak_mode_detected"] == "weak")
+    return [
+        csv_line("tables67_scaling_modes", 0.0,
+                 f"strong={r['strong_mode_detected']} weak={r['weak_mode_detected']} "
+                 f"detection_correct={ok_modes}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

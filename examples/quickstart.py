@@ -1,0 +1,54 @@
+"""Quickstart: train a reduced-config model with first-class TALP
+monitoring, print the POP factors, write a TALP-Pages run record.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core import factors as F
+from repro.core import render_text, build_table
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.train import TrainConfig
+
+
+def main():
+    cfg = smoke_config("tinyllama-1.1b")
+    data = SyntheticLM(
+        DataConfig(global_batch=4, seq_len=64, vocab=cfg.vocab, pad_fraction=0.1)
+    )
+    loop = TrainLoop(
+        cfg, make_host_mesh(), TrainConfig(), data,
+        LoopConfig(steps=10, lb_sample_every=1, monitor_app_name="quickstart"),
+    )
+    loop.run()
+
+    print("losses:", [round(m["loss"], 3) for m in loop.metrics_history])
+
+    run = loop.finalize_run()
+    out = "results/quickstart/talp_quickstart.json"
+    run.save(out)
+    print(f"\nTALP run record: {out}")
+
+    reg = run.regions["train_step"]
+    print(f"\nPOP factors for region 'train_step' "
+          f"({reg.measurements.num_steps} steps, "
+          f"{reg.measurements.elapsed_s:.2f}s elapsed):")
+    for key, depth in F.iter_tree():
+        if key in reg.pop:
+            print(f"  {'  ' * depth}{F.DISPLAY_NAMES[key]:<34} {reg.pop[key]:.3f}")
+
+    table = build_table([run], region="train_step")
+    print("\n" + render_text(table))
+
+
+if __name__ == "__main__":
+    main()

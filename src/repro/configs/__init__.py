@@ -1,0 +1,26 @@
+from repro.configs.archs import ARCHS, optimized_config, smoke_config
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, XLSTMConfig
+from repro.configs.shapes import (
+    SHAPE_BY_NAME,
+    SHAPES,
+    InputShape,
+    effective_mode,
+    skip_reason,
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]()
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+__all__ = [
+    "ARCHS", "ModelConfig", "MoEConfig", "SSMConfig", "XLSTMConfig",
+    "InputShape", "SHAPES", "SHAPE_BY_NAME", "get_config", "list_archs",
+    "smoke_config", "optimized_config", "skip_reason", "effective_mode",
+]

@@ -1,0 +1,39 @@
+"""repro.core — TALP-Pages for JAX: the paper's contribution.
+
+Public API:
+  TalpMonitor / MonitorConfig   on-the-fly POP factor collection (TALP)
+  StepProfile                   compiled-step static counters (PAPI analogue)
+  RunRecord / ResourceConfig    the JSON artifact schema
+  build_table / render_text     scaling-efficiency tables
+  generate_report               static HTML report (TALP-Pages)
+  scan / merge_history          CI folder handling
+  TraceRecorder / post_process  the tracing baseline (Score-P/Extrae stand-in)
+"""
+
+from repro.core.factors import compute_pop, validate_pop
+from repro.core.folder import Experiment, git_metadata, merge_history, scan
+from repro.core.hardware import DEFAULT_TARGET, TPU_V5E, TPU_V5P, ChipSpec, get_target
+from repro.core.monitor import MonitorConfig, TalpMonitor
+from repro.core.profile import StepProfile
+from repro.core.records import (
+    GLOBAL_REGION,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+from repro.core.report import badge_svg, generate_report
+from repro.core.scaling import ScalingTable, build_table, latest_per_config, render_text
+from repro.core.timeseries import build_series
+from repro.core.tracer import TraceRecorder, post_process, trace_storage_bytes
+
+__all__ = [
+    "TalpMonitor", "MonitorConfig", "StepProfile", "RunRecord", "RegionRecord",
+    "RegionCounters", "RegionMeasurements", "ResourceConfig", "GLOBAL_REGION",
+    "ChipSpec", "TPU_V5E", "TPU_V5P", "DEFAULT_TARGET", "get_target",
+    "compute_pop", "validate_pop", "build_table", "render_text", "ScalingTable",
+    "latest_per_config", "build_series", "generate_report", "badge_svg",
+    "scan", "merge_history", "git_metadata", "Experiment",
+    "TraceRecorder", "post_process", "trace_storage_bytes",
+]

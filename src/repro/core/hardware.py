@@ -1,0 +1,66 @@
+"""Hardware target models.
+
+The container runs on CPU; TPU v5e is the *target*. All roofline terms,
+modeled communication times and "hardware counter" analogues (the PAPI
+replacement, see DESIGN.md §3) are derived against these specs.
+
+Numbers come from the task spec: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. DCN bandwidth is an estimate for pod-to-pod traffic and
+only enters the multi-pod communication model, never the required roofline
+table (which is single-pod / ICI only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bandwidth: float       # bytes/s per chip
+    hbm_bytes: float           # HBM capacity per chip
+    ici_bandwidth: float       # bytes/s per link (one direction)
+    ici_links: int             # ICI links per chip (2D torus -> 4)
+    dcn_bandwidth: float       # bytes/s per chip for cross-pod traffic
+    clock_ghz: float           # nominal clock; TPUs do not DVFS under load
+    vmem_bytes: float          # VMEM per core
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_bandwidth=50e9,
+    ici_links=4,
+    dcn_bandwidth=6.25e9,
+    clock_ghz=0.94,
+    vmem_bytes=128 * 1024**2,
+)
+
+# Used by unit tests that need a second target to assert spec-independence.
+TPU_V5P = ChipSpec(
+    name="tpu_v5p",
+    peak_flops_bf16=459e12,
+    hbm_bandwidth=2765e9,
+    hbm_bytes=95 * 1024**3,
+    ici_bandwidth=100e9,
+    ici_links=6,
+    dcn_bandwidth=6.25e9,
+    clock_ghz=1.75,
+    vmem_bytes=128 * 1024**2,
+)
+
+TARGETS = {s.name: s for s in (TPU_V5E, TPU_V5P)}
+DEFAULT_TARGET = TPU_V5E
+
+
+def get_target(name: str | None) -> ChipSpec:
+    if name is None:
+        return DEFAULT_TARGET
+    try:
+        return TARGETS[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware target {name!r}; known: {sorted(TARGETS)}")

@@ -1,0 +1,592 @@
+"""HLO-text cost analyzer — the PAPI-counter analogue (DESIGN.md §3).
+
+TALP reads hardware counters (instructions, cycles) through PAPI. On
+TPU/XLA the equivalent ground truth is the *optimized HLO module*: executed
+FLOPs, HBM traffic and collective bytes. XLA's built-in
+``compiled.cost_analysis()`` visits every instruction **once**, so anything
+inside a ``while`` loop (every ``lax.scan``-over-layers model — i.e. all of
+ours) is undercounted by the trip count. This module re-derives costs from
+``compiled.as_text()`` with correct loop multiplicities:
+
+  * builds the computation graph (ENTRY, while bodies, fusions, calls),
+  * propagates multiplicity through ``while`` ops using the
+    ``known_trip_count`` backend config,
+  * counts dot FLOPs exactly (2 * result_elems * contracted_elems) via a
+    per-computation symbol table (operand shapes),
+  * models HBM traffic at fusion granularity (result + operand bytes of
+    top-level instructions),
+  * extracts every collective with its replica groups, classifies ICI vs
+    DCN by whether the group crosses a pod boundary, and reports both
+    operand bytes (the roofline-spec convention) and ring wire bytes,
+  * tags rematerialized dot FLOPs (op_name contains ``rematted``) so the
+    FLOP-usefulness factor can attribute waste to remat.
+
+This is deliberately a *text* analyzer: it needs nothing but what
+``lowered.compile()`` already produced, works identically on the CPU
+dry-run platform and real TPUs, and is unit-tested against hand-computed
+modules plus cross-checked against ``cost_analysis()`` on loop-free graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Any, Iterable
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 0.25, "u2": 0.25,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# ops counted as 1 FLOP / element on the result
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "cbrt",
+    "compare", "select", "clamp", "and", "or", "xor", "not", "erf",
+}
+# zero-cost / bookkeeping ops (no FLOPs, no modeled HBM traffic)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "iota",
+    "opt-barrier", "domain", "add-dependency",
+}
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr_line(line: str):
+    """Parse '%name = TYPE op(...), attrs' robustly.
+
+    TYPE may be a tuple whose text embeds '/*index=N*/' comments (so no
+    naive [^=] regex) — match balanced parens instead.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str = rest[: end + 1]
+        rest2 = rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest2 = rest[sp + 1:].lstrip()
+    m = _OP_RE.match(rest2)
+    if not m:
+        return None
+    return Instruction(name, type_str, m.group(1), rest2[m.end():])
+_COMP_NAME_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _comp_head(line: str) -> tuple[bool, str] | None:
+    """Detect a computation definition header line.
+
+    Headers look like ``%name (p: (s32[], ...)) -> (s32[], ...) {`` (params
+    may nest parens, so this is not regex-parseable in one shot); instruction
+    lines always contain ``=`` before the first ``(``.
+    """
+    s = line.rstrip()
+    if not s.endswith("{") or "->" not in s:
+        return None
+    prefix = s.split("(", 1)[0]
+    if "=" in prefix or prefix.strip().startswith("HloModule"):
+        return None
+    m = _COMP_NAME_RE.match(line)
+    if not m:
+        return None
+    return bool(m.group(1)), m.group(2)
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All (dtype, dims) in a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def shape_bytes(type_str: str) -> float:
+    return sum(
+        DTYPE_BYTES[dt] * float(np.prod(dims, dtype=np.float64)) if dims else DTYPE_BYTES[dt]
+        for dt, dims in _parse_shapes(type_str)
+    )
+
+
+def shape_elems(type_str: str) -> float:
+    return sum(
+        float(np.prod(dims, dtype=np.float64)) if dims else 1.0
+        for _, dims in _parse_shapes(type_str)
+    )
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    _operands: list[str] | None = None
+
+    @property
+    def operands(self) -> list[str]:
+        if self._operands is None:
+            # operand list = everything up to the matching close paren
+            depth, end = 1, len(self.rest)
+            for i, ch in enumerate(self.rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            ops = []
+            for tok in self.rest[:end].split(","):
+                tok = tok.strip()
+                if tok.startswith("%"):
+                    ops.append(tok[1:])
+                else:
+                    # typed operand "f32[2,3] %name"
+                    m = re.search(r"%([\w\.\-]+)\s*$", tok)
+                    if m:
+                        ops.append(m.group(1))
+            self._operands = ops
+        return self._operands
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=(\{{[^=]*?\}}|\[[^\]]*\](?:<=\[[^\]]*\])?(?:T\([^)]*\))?|[\w\.\-\"%]+)", self.rest)
+        return m.group(1) if m else None
+
+    def int_list_attr(self, key: str) -> list[int]:
+        m = re.search(rf"{key}={{([0-9,\s]*)}}", self.rest)
+        if not m:
+            return []
+        return [int(t) for t in m.group(1).split(",") if t.strip()]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instructions: dict[str, Instruction]
+
+
+def parse_computations(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        head = _comp_head(line)
+        if head is not None:
+            cur = Computation(head[1], head[0], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        instr = _parse_instr_line(line)
+        if instr is not None:
+            cur.instructions[instr.name] = instr
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# replica groups
+# ---------------------------------------------------------------------------
+
+
+def parse_replica_groups(instr: Instruction) -> list[list[int]]:
+    """Materialize replica groups from explicit or iota format."""
+    # iota: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...)
+    m = re.search(
+        r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", instr.rest
+    )
+    if m:
+        gshape = [int(x) for x in m.group(1).split(",")]
+        dims = [int(x) for x in m.group(2).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(gshape).tolist()
+    # explicit: replica_groups={{0,1},{2,3}}
+    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", instr.rest)
+    if m:
+        return [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([0-9,\s]*)\}", m.group(1))
+        ]
+    # collective-permute: source_target_pairs
+    m = re.search(r"source_target_pairs=\{(.*?)\}\}", instr.rest)
+    if m:
+        return [
+            [int(x) for x in pair.split(",")]
+            for pair in re.findall(r"\{([0-9,\s]+)\}", m.group(0))
+        ]
+    return []
+
+
+def groups_cross_pod(groups: list[list[int]], devices_per_pod: int | None) -> bool:
+    if not devices_per_pod:
+        return False
+    for g in groups:
+        pods = {d // devices_per_pod for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CollectiveCost:
+    kind: str
+    comp: str
+    name: str
+    result_bytes: float
+    operand_bytes: float
+    wire_bytes: float  # ring-algorithm bytes per participating device
+    group_size: int
+    multiplicity: float
+    is_dcn: bool
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return self.operand_bytes * self.multiplicity
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return self.wire_bytes * self.multiplicity
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Per-device costs of one compiled SPMD program execution."""
+
+    flops: float = 0.0                 # all FLOPs (dots + elementwise + reduces)
+    dot_flops: float = 0.0
+    remat_dot_flops: float = 0.0       # dot FLOPs inside rematted computations
+    hbm_bytes: float = 0.0             # modeled HBM traffic (fusion granularity)
+    collective_operand_bytes_ici: float = 0.0
+    collective_operand_bytes_dcn: float = 0.0
+    collective_wire_bytes_ici: float = 0.0
+    collective_wire_bytes_dcn: float = 0.0
+    collectives: list[CollectiveCost] = dataclasses.field(default_factory=list)
+    op_counts: dict[str, float] = dataclasses.field(default_factory=dict)
+    max_while_trip_count: int = 0
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return self.collective_operand_bytes_ici + self.collective_operand_bytes_dcn
+
+    def collective_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0) + 1
+        return out
+
+    def to_json(self) -> dict[str, Any]:
+        d = {
+            k: getattr(self, k)
+            for k in (
+                "flops", "dot_flops", "remat_dot_flops", "hbm_bytes",
+                "collective_operand_bytes_ici", "collective_operand_bytes_dcn",
+                "collective_wire_bytes_ici", "collective_wire_bytes_dcn",
+                "max_while_trip_count",
+            )
+        }
+        d["op_counts"] = dict(self.op_counts)
+        d["collectives"] = [
+            {
+                "kind": c.kind, "comp": c.comp, "name": c.name,
+                "operand_bytes": c.operand_bytes, "wire_bytes": c.wire_bytes,
+                "group_size": c.group_size, "multiplicity": c.multiplicity,
+                "is_dcn": c.is_dcn,
+            }
+            for c in self.collectives
+        ]
+        return d
+
+
+def _trip_count(instr: Instruction) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', instr.rest)
+    if m:
+        return float(m.group(1))
+    return 1.0
+
+
+def _called_comps(instr: Instruction) -> list[str]:
+    """Computations invoked by this instruction (excluding reduce combiners,
+    which are per-element and negligible)."""
+    names: list[str] = []
+    for key in ("body", "condition", "calls", "branch_computations",
+                "true_computation", "false_computation"):
+        m = re.search(rf"{key}=%?([\w\.\-]+)", instr.rest)
+        if m:
+            names.append(m.group(1))
+        else:
+            m = re.search(rf"{key}=\{{([^}}]*)\}}", instr.rest)
+            if m:
+                names += [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+    return names
+
+
+def _dot_flops(instr: Instruction, symtab: dict[str, Instruction]) -> float:
+    result_elems = shape_elems(instr.type_str)
+    contract = instr.int_list_attr("lhs_contracting_dims")
+    lhs_name = instr.operands[0] if instr.operands else None
+    k = 1.0
+    if lhs_name and lhs_name in symtab and contract:
+        shapes = _parse_shapes(symtab[lhs_name].type_str)
+        if shapes:
+            _, dims = shapes[0]
+            for d in contract:
+                if d < len(dims):
+                    k *= dims[d]
+    return 2.0 * result_elems * k
+
+
+def analyze_hlo(
+    hlo_text: str,
+    devices_per_pod: int | None = None,
+) -> HloCost:
+    """Analyze an optimized (post-SPMD-partitioning) HLO module dump.
+
+    All numbers are **per device per execution** of the module;
+    multiply by the device count for machine totals.
+    """
+    comps = parse_computations(hlo_text)
+    cost = HloCost()
+
+    # --- multiplicity propagation (BFS from ENTRY through call sites) ---
+    mult: dict[str, float] = {}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:  # fall back: treat every computation as mult 1
+        entry_names = list(comps)
+        mult = {n: 1.0 for n in entry_names}
+    else:
+        mult[entry.name] = 1.0
+        # process in call order; repeat passes until fixpoint (call graph is a DAG)
+        changed = True
+        guard = 0
+        while changed and guard < 64:
+            changed = False
+            guard += 1
+            for cname, comp in comps.items():
+                base = mult.get(cname)
+                if base is None:
+                    continue
+                for instr in comp.instructions.values():
+                    trips = _trip_count(instr) if instr.op == "while" else 1.0
+                    if instr.op == "while":
+                        cost.max_while_trip_count = max(
+                            cost.max_while_trip_count, int(trips)
+                        )
+                    for callee in _called_comps(instr):
+                        if callee not in comps:
+                            continue
+                        new = base * trips
+                        if mult.get(callee, 0.0) < new:
+                            mult[callee] = new
+                            changed = True
+
+    # --- per-instruction costs ---
+    fusion_bodies = set()
+    for comp in comps.values():
+        for instr in comp.instructions.values():
+            if instr.op == "fusion":
+                fusion_bodies.update(_called_comps(instr))
+
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        inside_fusion = cname in fusion_bodies
+        symtab = comp.instructions
+        for instr in comp.instructions.values():
+            op = instr.op
+            base_kind = op[:-6] if op.endswith("-start") else op
+            cost.op_counts[base_kind] = cost.op_counts.get(base_kind, 0.0) + m
+
+            if base_kind in COLLECTIVE_KINDS:
+                if op.endswith("-done"):
+                    continue
+                result_bytes = shape_bytes(instr.type_str)
+                groups = parse_replica_groups(instr)
+                if base_kind == "collective-permute":
+                    g = 2
+                else:
+                    g = max((len(grp) for grp in groups), default=1)
+                if base_kind == "all-gather":
+                    operand_bytes = result_bytes / max(g, 1)
+                    wire = result_bytes * (g - 1) / max(g, 1)
+                elif base_kind == "reduce-scatter":
+                    operand_bytes = result_bytes * g
+                    wire = operand_bytes * (g - 1) / max(g, 1)
+                elif base_kind == "all-reduce":
+                    operand_bytes = result_bytes
+                    wire = 2.0 * operand_bytes * (g - 1) / max(g, 1)
+                elif base_kind in ("all-to-all", "ragged-all-to-all"):
+                    operand_bytes = result_bytes
+                    wire = operand_bytes * (g - 1) / max(g, 1)
+                else:  # collective-permute / broadcast
+                    operand_bytes = result_bytes
+                    wire = result_bytes
+                is_dcn = groups_cross_pod(groups, devices_per_pod)
+                cost.collectives.append(
+                    CollectiveCost(
+                        kind=base_kind, comp=cname, name=instr.name,
+                        result_bytes=result_bytes, operand_bytes=operand_bytes,
+                        wire_bytes=wire, group_size=g, multiplicity=m,
+                        is_dcn=is_dcn,
+                    )
+                )
+                if is_dcn:
+                    cost.collective_operand_bytes_dcn += operand_bytes * m
+                    cost.collective_wire_bytes_dcn += wire * m
+                else:
+                    cost.collective_operand_bytes_ici += operand_bytes * m
+                    cost.collective_wire_bytes_ici += wire * m
+                # collectives also touch HBM (read + write)
+                cost.hbm_bytes += (operand_bytes + result_bytes) * m
+                continue
+
+            if op in _FREE_OPS:
+                continue
+
+            if op == "dot":
+                f = _dot_flops(instr, symtab) * m
+                cost.flops += f
+                cost.dot_flops += f
+                if "rematted" in instr.rest or "/checkpoint/" in instr.rest:
+                    cost.remat_dot_flops += f
+            elif op == "convolution":
+                # rare here; approximate via result elems * window (unknown) -> count result
+                cost.flops += 2.0 * shape_elems(instr.type_str) * m
+            elif op in _ELEMENTWISE_FLOP_OPS:
+                cost.flops += shape_elems(instr.type_str) * m
+            elif op in ("reduce", "reduce-window"):
+                # ~1 flop per input element
+                for opn in instr.operands[: max(1, len(instr.operands) // 2)]:
+                    if opn in symtab:
+                        cost.flops += shape_elems(symtab[opn].type_str) * m
+
+            # HBM traffic at fusion granularity: only top-level instructions.
+            # Slicing ops read/write only the slice, not their operands.
+            if not inside_fusion and op not in ("while", "conditional", "call"):
+                result_bytes = shape_bytes(instr.type_str)
+                if op in ("dynamic-slice", "slice", "gather"):
+                    traffic = 2.0 * result_bytes
+                elif op == "dynamic-update-slice":
+                    upd = (
+                        shape_bytes(symtab[instr.operands[1]].type_str)
+                        if len(instr.operands) > 1 and instr.operands[1] in symtab
+                        else result_bytes
+                    )
+                    traffic = 2.0 * upd
+                elif op == "scatter":
+                    upd = (
+                        shape_bytes(symtab[instr.operands[2]].type_str)
+                        if len(instr.operands) > 2 and instr.operands[2] in symtab
+                        else result_bytes
+                    )
+                    traffic = 2.0 * upd
+                else:
+                    traffic = result_bytes
+                    for opn in instr.operands:
+                        if opn in symtab:
+                            traffic += shape_bytes(symtab[opn].type_str)
+                cost.hbm_bytes += traffic * m
+
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# integration with jax.stages
+# ---------------------------------------------------------------------------
+
+
+def xla_cost_analysis(compiled) -> dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {str(k): float(v) for k, v in dict(ca).items() if _is_num(v)}
+
+
+def _is_num(v) -> bool:
+    try:
+        float(v)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def memory_stats(compiled) -> dict[str, float]:
+    try:
+        ms = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ms, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

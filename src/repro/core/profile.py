@@ -1,0 +1,157 @@
+"""StepProfile — static per-step counters extracted from a compiled step.
+
+Bridges the HLO analyzer (core.hlo) and the monitor/roofline consumers.
+A StepProfile describes ONE execution of a compiled SPMD program across the
+whole machine (totals = per-device HLO numbers x device count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core import hlo as _hlo
+from repro.core.hardware import ChipSpec, get_target
+from repro.core.records import RegionCounters
+
+
+@dataclasses.dataclass
+class StepProfile:
+    """Machine-total static counters for one step execution."""
+
+    num_devices: int = 1
+    flops: float = 0.0                  # executed HLO FLOPs, total
+    dot_flops: float = 0.0
+    remat_dot_flops: float = 0.0
+    hbm_bytes: float = 0.0              # HBM traffic, total
+    collective_bytes_ici: float = 0.0   # operand-bytes convention, total
+    collective_bytes_dcn: float = 0.0
+    collective_wire_bytes_ici: float = 0.0
+    collective_wire_bytes_dcn: float = 0.0
+    model_flops: float = 0.0            # analytic useful FLOPs (6ND-style)
+    model_bytes: float = 0.0            # analytic minimal HBM bytes (decode)
+    collective_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    xla_cost: dict[str, float] = dataclasses.field(default_factory=dict)
+    memory: dict[str, float] = dataclasses.field(default_factory=dict)
+    max_while_trip_count: int = 0
+
+    # ---- construction ----
+
+    @classmethod
+    def from_compiled(
+        cls,
+        compiled,
+        num_devices: int,
+        devices_per_pod: int | None = None,
+        model_flops: float = 0.0,
+        model_bytes: float = 0.0,
+    ) -> "StepProfile":
+        cost = _hlo.analyze_hlo(compiled.as_text(), devices_per_pod=devices_per_pod)
+        return cls.from_hlo_cost(
+            cost,
+            num_devices=num_devices,
+            model_flops=model_flops,
+            model_bytes=model_bytes,
+            xla_cost=_hlo.xla_cost_analysis(compiled),
+            memory=_hlo.memory_stats(compiled),
+        )
+
+    @classmethod
+    def from_hlo_cost(
+        cls,
+        cost: _hlo.HloCost,
+        num_devices: int,
+        model_flops: float = 0.0,
+        model_bytes: float = 0.0,
+        xla_cost: dict[str, float] | None = None,
+        memory: dict[str, float] | None = None,
+    ) -> "StepProfile":
+        n = max(num_devices, 1)
+        return cls(
+            num_devices=n,
+            model_bytes=model_bytes,
+            flops=cost.flops * n,
+            dot_flops=cost.dot_flops * n,
+            remat_dot_flops=cost.remat_dot_flops * n,
+            hbm_bytes=cost.hbm_bytes * n,
+            collective_bytes_ici=cost.collective_operand_bytes_ici * n,
+            collective_bytes_dcn=cost.collective_operand_bytes_dcn * n,
+            collective_wire_bytes_ici=cost.collective_wire_bytes_ici * n,
+            collective_wire_bytes_dcn=cost.collective_wire_bytes_dcn * n,
+            model_flops=model_flops,
+            collective_counts=cost.collective_counts(),
+            xla_cost=dict(xla_cost or {}),
+            memory=dict(memory or {}),
+            max_while_trip_count=cost.max_while_trip_count,
+        )
+
+    # ---- transforms ----
+
+    def scaled(self, steps: float) -> "StepProfile":
+        d = dataclasses.asdict(self)
+        for k in (
+            "flops", "dot_flops", "remat_dot_flops", "hbm_bytes",
+            "collective_bytes_ici", "collective_bytes_dcn",
+            "collective_wire_bytes_ici", "collective_wire_bytes_dcn",
+            "model_flops", "model_bytes",
+        ):
+            d[k] = d[k] * steps
+        return StepProfile(**d)
+
+    def to_counters(self) -> RegionCounters:
+        return RegionCounters(
+            useful_flops=self.flops,
+            hlo_bytes=self.hbm_bytes,
+            collective_bytes_ici=self.collective_bytes_ici,
+            collective_bytes_dcn=self.collective_bytes_dcn,
+            model_flops=self.model_flops,
+        )
+
+    # ---- roofline (the §Roofline three terms) ----
+
+    def roofline_terms(self, spec: ChipSpec | str | None = None) -> dict[str, float]:
+        """Seconds per step on the target hardware.
+
+        compute    = HLO_FLOPs / (chips * peak)
+        memory     = HLO_bytes / (chips * HBM_bw)
+        collective = collective_bytes / (chips * link_bw)   [operand-bytes]
+        """
+        if not isinstance(spec, ChipSpec):
+            spec = get_target(spec)
+        n = self.num_devices
+        compute = self.flops / (n * spec.peak_flops_bf16)
+        memory = self.hbm_bytes / (n * spec.hbm_bandwidth)
+        coll_ici = (self.collective_bytes_ici) / (n * spec.ici_bandwidth)
+        coll_dcn = (self.collective_bytes_dcn) / (n * spec.dcn_bandwidth)
+        collective = coll_ici + coll_dcn
+        terms = {
+            "compute_s": compute,
+            "memory_s": memory,
+            "collective_s": collective,
+            "collective_ici_s": coll_ici,
+            "collective_dcn_s": coll_dcn,
+        }
+        bound = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+        terms["bottleneck"] = bound  # type: ignore[assignment]
+        terms["step_time_lower_bound_s"] = max(compute, memory, collective)
+        terms["step_time_serial_s"] = compute + memory + collective
+        if self.model_flops > 0:
+            # MFU against the no-overlap serial model and the roofline bound
+            ideal = self.model_flops / (n * spec.peak_flops_bf16)
+            terms["roofline_fraction"] = ideal / max(terms["step_time_serial_s"], 1e-30)
+            terms["roofline_fraction_overlapped"] = ideal / max(
+                terms["step_time_lower_bound_s"], 1e-30
+            )
+            terms["model_to_hlo_flops"] = self.model_flops / max(self.flops, 1e-30)
+        if self.model_bytes > 0:
+            ideal_mem = self.model_bytes / (n * spec.hbm_bandwidth)
+            terms["memory_roofline_fraction"] = ideal_mem / max(terms["memory_s"], 1e-30)
+        return terms
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict[str, Any]) -> "StepProfile":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})

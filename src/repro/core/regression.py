@@ -1,0 +1,154 @@
+"""Regression detection + explanation (paper §Reports / Figure 7).
+
+The paper's value proposition over wall-clock-only CI monitors: when
+elapsed time changes, the POP factor hierarchy *explains* it. Given the
+time series of one (region, resource configuration), we compare each run
+to the previous one; if elapsed time moved more than ``threshold``, we walk
+the factor tree to the deepest factor whose change is sufficient to explain
+the move ("OpenMP serialization efficiency is responsible for the parallel
+efficiency increase" in the paper's GENE-X study becomes e.g. "dispatch
+efficiency is responsible for the parallel-efficiency drop" here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import factors as F
+from repro.core.timeseries import RegionSeries
+
+
+@dataclasses.dataclass
+class Finding:
+    kind: str            # "regression" | "improvement"
+    region: str
+    config_label: str
+    timestamp: str
+    commit: str | None
+    elapsed_before: float
+    elapsed_after: float
+    rel_change: float    # (after-before)/before; negative = faster
+    explanation: list[str]   # factor path, outermost -> deepest
+    factor_changes: dict[str, tuple[float, float]]
+
+    def describe(self) -> str:
+        direction = "improvement" if self.rel_change < 0 else "regression"
+        pct = abs(self.rel_change) * 100.0
+        where = f"{self.region} @ {self.config_label}"
+        head = f"{direction} of {pct:.1f}% in elapsed time ({where})"
+        if self.commit:
+            head += f" at commit {self.commit}"
+        if not self.explanation:
+            return head + " — no factor change explains it (likely machine noise or external change)"
+        path = " -> ".join(F.DISPLAY_NAMES.get(k, k) for k in self.explanation)
+        leaf = self.explanation[-1]
+        b, a = self.factor_changes[leaf]
+        return f"{head} — explained by {path} ({b:.3f} -> {a:.3f})"
+
+
+def _tree_children(key: str, node=F.FACTOR_TREE):
+    name, children = node
+    if name == key:
+        return children
+    for ch in children:
+        found = _tree_children(key, ch)
+        if found is not None:
+            return found
+    return None
+
+
+def explain(
+    before: dict[str, float],
+    after: dict[str, float],
+    factor_threshold: float = 0.02,
+) -> tuple[list[str], dict[str, tuple[float, float]]]:
+    """Walk the factor tree from the root; at each level descend into the
+    child with the largest relative change (if above threshold). Returns the
+    path and the (before, after) values of every factor on it."""
+    path: list[str] = []
+    changes: dict[str, tuple[float, float]] = {}
+    key = F.GLOBAL_EFF
+    while True:
+        b, a = before.get(key), after.get(key)
+        if b is None or a is None or b <= 0:
+            break
+        rel = abs(a - b) / b
+        if rel < factor_threshold:
+            break
+        path.append(key)
+        changes[key] = (b, a)
+        children = _tree_children(key) or []
+        best, best_rel = None, factor_threshold
+        for child_node in children:
+            ck = child_node[0]
+            cb, ca = before.get(ck), after.get(ck)
+            if cb is None or ca is None or cb <= 0:
+                continue
+            crel = abs(ca - cb) / cb
+            if crel > best_rel:
+                best, best_rel = ck, crel
+        if best is None:
+            break
+        key = best
+    return path, changes
+
+
+def _with_cross_run_scalability(
+    before: dict[str, float], after: dict[str, float]
+) -> dict[str, float]:
+    """Recompute ``after``'s computation-scalability branch relative to
+    ``before`` (same input, same resources => strong-scaling assumption:
+    total executed FLOPs should be constant; a remat/recompute bug shows up
+    as flop_scaling < 1, a slower-kernel bug as throughput_scaling < 1)."""
+    out = dict(after)
+    bf, af = before.get("_useful_flops", 0.0), after.get("_useful_flops", 0.0)
+    flop = bf / af if bf > 0 and af > 0 else 1.0
+    bt, at_ = before.get("_device_time_s", 0.0), after.get("_device_time_s", 0.0)
+    if bf > 0 and af > 0 and bt > 0 and at_ > 0:
+        thr = (af / at_) / (bf / bt)
+    else:
+        thr = 1.0
+    out[F.FLOP_SCALING] = flop
+    out[F.THROUGHPUT_SCALING] = thr
+    out[F.FREQUENCY_SCALING] = 1.0
+    out[F.COMP_SCALABILITY] = flop * thr
+    if F.PARALLEL_EFF in out:
+        out[F.GLOBAL_EFF] = out[F.PARALLEL_EFF] * out[F.COMP_SCALABILITY]
+    return out
+
+
+def detect(
+    series: RegionSeries,
+    config_label: str,
+    threshold: float = 0.05,
+    factor_threshold: float = 0.02,
+) -> list[Finding]:
+    """Scan consecutive runs of one region/configuration for elapsed-time
+    changes beyond ``threshold`` and explain each via the factor tree."""
+    findings: list[Finding] = []
+    pts = series.points
+    for prev, cur in zip(pts, pts[1:]):
+        eb = prev.values.get(F.ELAPSED_S)
+        ea = cur.values.get(F.ELAPSED_S)
+        if not eb or ea is None or eb <= 0:
+            continue
+        rel = (ea - eb) / eb
+        if abs(rel) < threshold:
+            continue
+        after = _with_cross_run_scalability(prev.values, cur.values)
+        path, changes = explain(prev.values, after, factor_threshold)
+        findings.append(
+            Finding(
+                kind="improvement" if rel < 0 else "regression",
+                region=series.region,
+                config_label=config_label,
+                timestamp=cur.timestamp,
+                commit=cur.commit,
+                elapsed_before=eb,
+                elapsed_after=ea,
+                rel_change=rel,
+                explanation=path,
+                factor_changes=changes,
+            )
+        )
+    return findings

@@ -1,0 +1,4 @@
+from repro.distributed import sharding
+from repro.distributed.elastic import reshard_state
+
+__all__ = ["sharding", "reshard_state"]

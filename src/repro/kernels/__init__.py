@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rmsnorm.ops import rmsnorm
+
+__all__ = ["flash_attention", "rmsnorm"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Naive O(S^2)-memory attention with the exact same semantics the kernel
+implements: GQA, causal/bidirectional, sliding window, logit softcap.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    softcap: float | None = None,
+):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D); Hq = G*Hkv. Returns (B,Sq,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)  # head h -> (h//G, h%G)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bghqk", qf, kf) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None and window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bghqk,bkhd->bghqd", p, vf)
+    return o.transpose(0, 3, 2, 1, 4).reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_reference(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    """x: (..., d); scale: (d,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    s = scale.astype(jnp.float32)
+    if zero_centered:
+        s = 1.0 + s
+    return (y * s).astype(x.dtype)

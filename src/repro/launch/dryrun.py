@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with NO buffer allocation (ShapeDtypeStruct inputs).
+
+For each non-skipped cell this produces a JSON artifact with:
+  * compiled.memory_analysis()      -- proves the cell fits per-device HBM
+  * compiled.cost_analysis()        -- XLA's per-device FLOPs/bytes
+  * the HLO-text counter analysis   -- loop-corrected FLOPs/bytes +
+                                       collective bytes split ICI/DCN
+  * the three roofline terms        -- §Roofline (single-pod mesh)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+      --shape train_4k --multi-pod both --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    SHAPES, SHAPE_BY_NAME, effective_mode, get_config, list_archs, skip_reason,
+)
+from repro.core.profile import StepProfile
+from repro.data.pipeline import batch_specs
+from repro.distributed import sharding as SH
+from repro.launch.mesh import devices_per_pod, make_production_mesh
+from repro.layers.common import abstract_params, param_pspecs
+from repro.models import transformer as T
+from repro.models.flops import (
+    decode_model_bytes,
+    decode_model_flops,
+    prefill_model_flops,
+    train_step_model_flops,
+)
+from repro.optim import AdamWConfig
+from repro.serve.serve import cache_pspec_tree, make_decode_step, make_encoder_step, make_prefill_step
+from repro.train.train import TrainConfig, make_train_step
+
+
+def abstract_state(cfg, tcfg: TrainConfig):
+    params = abstract_params(T.model_params(cfg), cfg.param_dtype)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+    }
+    if tcfg.optimizer.keep_master:
+        opt["master"] = jax.tree_util.tree_map(f32, params)
+    return {"params": params, "opt_state": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _sharding(mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _batch_shardings(mesh, batch_tree, lead_dims: int = 1):
+    """Shard the batch dim (index lead_dims-1... actually index 0 for serve,
+    index 1 for train's (A,B,...) layout)."""
+
+    def f(x):
+        b_index = 1 if lead_dims == 2 else 0
+        axes = SH.divisible_batch_axes(mesh, x.shape[b_index])
+        spec = [None] * len(x.shape)
+        spec[b_index] = axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(f, batch_tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, tcfg=None, cfg=None,
+               accum: int = 1):
+    """Lower+compile one cell; returns (compiled, model_flops, mesh, meta).
+    ``cfg`` overrides the registry config (perf hillclimbing); ``accum``
+    splits the train global batch into microbatches (peak-memory knob —
+    per-step roofline totals are unchanged)."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = effective_mode(cfg, shape)
+    tcfg = tcfg or TrainConfig(optimizer=AdamWConfig())
+    meta = {"arch": arch, "shape": shape_name, "mode": mode,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "strategy": SH.effective_strategy(cfg, mesh)}
+
+    with mesh:
+        if mode == "train":
+            state = abstract_state(cfg, tcfg)
+            from repro.train.train import train_state_pspecs
+
+            state_sh = _sharding(mesh, train_state_pspecs(cfg, mesh, tcfg))
+            batch = batch_specs(cfg, shape, "train")
+            if accum > 1:
+                batch = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (accum, x.shape[1] // accum) + x.shape[2:], x.dtype
+                    ),
+                    batch,
+                )
+            batch_sh = _batch_shardings(mesh, batch, lead_dims=2)
+            step = make_train_step(cfg, mesh, tcfg)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,),
+            ).lower(state, batch)
+            model_flops = train_step_model_flops(cfg, batch["labels"].shape)
+        elif mode in ("prefill", "encoder"):
+            params = abstract_params(T.model_params(cfg), cfg.param_dtype)
+            params_sh = _sharding(
+                mesh, param_pspecs(T.model_params(cfg), SH.param_rules(cfg, mesh), mesh)
+            )
+            batch = batch_specs(cfg, shape, "prefill")
+            batch_sh = _batch_shardings(mesh, batch)
+            if mode == "encoder":
+                step = make_encoder_step(cfg, mesh)
+                lowered = jax.jit(
+                    step, in_shardings=(params_sh, batch_sh)
+                ).lower(params, batch)
+            else:
+                caches = jax.eval_shape(
+                    lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len)
+                )
+                caches_sh = _sharding(mesh, cache_pspec_tree(cfg, mesh, caches))
+                step = make_prefill_step(cfg, mesh)
+                lowered = jax.jit(
+                    step, in_shardings=(params_sh, batch_sh, caches_sh),
+                    out_shardings=(None, caches_sh), donate_argnums=(2,),
+                ).lower(params, batch, caches)
+            model_flops = prefill_model_flops(cfg, shape.global_batch, shape.seq_len)
+        elif mode == "decode":
+            params = abstract_params(T.model_params(cfg), cfg.param_dtype)
+            params_sh = _sharding(
+                mesh, param_pspecs(T.model_params(cfg), SH.param_rules(cfg, mesh), mesh)
+            )
+            caches = jax.eval_shape(
+                lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            caches_sh = _sharding(mesh, cache_pspec_tree(cfg, mesh, caches))
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tokens_sh = _batch_shardings(mesh, tokens)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_decode_step(cfg, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, tokens_sh, None, caches_sh),
+                out_shardings=(None, caches_sh), donate_argnums=(3,),
+            ).lower(params, tokens, pos, caches)
+            model_flops = decode_model_flops(cfg, shape.global_batch, shape.seq_len)
+            meta["model_bytes"] = decode_model_bytes(cfg, shape.global_batch, shape.seq_len)
+        else:
+            raise ValueError(mode)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        meta["compile_s"] = round(time.time() - t0, 1)
+    return compiled, model_flops, mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, optimized: bool = False) -> dict:
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'singlepod'}"
+    if optimized:
+        tag += "__opt"
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec = {"status": "skipped", "reason": reason, "arch": arch,
+               "shape": shape_name, "multi_pod": multi_pod}
+        _save(out_path, rec)
+        return rec
+
+    try:
+        cfg_over = None
+        if optimized:
+            from repro.configs import optimized_config
+
+            cfg_over = optimized_config(arch)
+        compiled, model_flops, mesh, meta = lower_cell(
+            arch, shape_name, multi_pod, cfg=cfg_over
+        )
+        profile = StepProfile.from_compiled(
+            compiled,
+            num_devices=mesh.devices.size,
+            devices_per_pod=devices_per_pod(mesh),
+            model_flops=model_flops,
+            model_bytes=meta.pop("model_bytes", 0.0),
+        )
+        rec = {
+            "status": "ok", "multi_pod": multi_pod, **meta,
+            "profile": profile.to_json(),
+            "roofline": profile.roofline_terms(),
+            "memory_analysis": profile.memory,
+        }
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        rec = {"status": "failed", "arch": arch, "shape": shape_name,
+               "multi_pod": multi_pod, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+    _save(out_path, rec)
+    return rec
+
+
+def _save(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the §Perf-optimized presets instead of the "
+                         "paper-faithful baselines")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else args.shape.split(",")
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, args.out, args.force, args.optimized)
+                dt = time.time() - t0
+                status = rec["status"]
+                line = f"{arch:24s} {shape:12s} {'2x16x16' if mp else '16x16':8s} {status:8s} {dt:6.1f}s"
+                if status == "ok":
+                    r = rec["roofline"]
+                    mem = rec["memory_analysis"]
+                    hbm = (mem.get("argument_size_in_bytes", 0) +
+                           mem.get("temp_size_in_bytes", 0)) / 2**30
+                    frac = r.get("memory_roofline_fraction", r.get("roofline_fraction", 0))
+                    line += (f" bottleneck={r['bottleneck'][:-2]:12s}"
+                             f" roofline={frac:.3f}"
+                             f" mem/dev={hbm:.2f}GiB")
+                elif status == "skipped":
+                    line += f" ({rec['reason'][:60]})"
+                else:
+                    n_fail += 1
+                    line += f" {rec['error'][:120]}"
+                print(line, flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

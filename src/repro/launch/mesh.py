@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module does not touch jax device initialization — the
+dry-run must set XLA_FLAGS before any device query.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    The "pod" axis crosses DCN; "data"/"model" stay on ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int | None = None):
+    """Small mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    model = model or 1
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def devices_per_pod(mesh) -> int | None:
+    """Device count inside one pod (None when single-pod => no DCN)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "pod" not in sizes or sizes["pod"] == 1:
+        return None
+    total = 1
+    for s in mesh.devices.shape:
+        total *= s
+    return total // sizes["pod"]

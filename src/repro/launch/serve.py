@@ -1,0 +1,69 @@
+"""Serving launcher: continuous-batching decode with monitoring.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --requests 8 --max-new 8 --talp-out talp/serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--talp-out", default="")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.core import MonitorConfig, ResourceConfig, TalpMonitor
+    from repro.launch.mesh import make_host_mesh
+    from repro.layers.common import init_params
+    from repro.models import transformer as T
+    from repro.serve.serve import BatchScheduler, ServeConfig
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    mon = TalpMonitor(
+        MonitorConfig(app_name=f"serve-{args.arch}", lb_sample_every=1),
+        ResourceConfig(num_hosts=1, devices_per_host=len(jax.devices())),
+    )
+    rng = np.random.default_rng(0)
+    with mesh, mon:
+        sched = BatchScheduler(
+            cfg, mesh, ServeConfig(max_len=args.max_len, batch=args.batch), params
+        )
+        for rid in range(args.requests):
+            prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
+            sched.submit(prompt, request_id=rid, max_new=args.max_new)
+        with mon.region("decode"):
+            steps = 0
+            while len(sched.completed) < args.requests and steps < 10 * args.max_len:
+                sched.step()
+                mon.observe_step(sched.tokens)
+                steps += 1
+    print(f"[serve] completed {len(sched.completed)}/{args.requests} requests "
+          f"in {steps} decode steps")
+    if args.talp_out:
+        run = mon.finalize()
+        path = os.path.join(args.talp_out, "talp_serve.json")
+        run.save(path)
+        print(f"[serve] TALP record: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,93 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 10 --ckpt-dir /tmp/ckpt --talp-out talp/case/strong
+
+On a real TPU slice this runs under the standard multi-host JAX bootstrap
+(jax.distributed.initialize is called automatically when the TPU env vars
+are present); on this container use --smoke (reduced config, host devices).
+Re-running with the same --ckpt-dir resumes from the latest checkpoint
+(crash = restart the process; the data pipeline is step-indexed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf-optimized preset")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--talp-out", default="",
+                    help="directory for the TALP run record (CI artifact)")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="model-parallel degree of the host mesh")
+    args = ap.parse_args(argv)
+
+    try:  # multi-host TPU bootstrap (no-op on CPU)
+        import jax
+
+        if os.environ.get("TPU_WORKER_HOSTNAMES"):
+            jax.distributed.initialize()
+    except Exception as e:  # pragma: no cover
+        print(f"[launch] distributed init skipped: {e}")
+
+    from repro.configs import get_config, optimized_config, smoke_config
+    from repro.core import git_metadata
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamWConfig
+    from repro.train.loop import LoopConfig, TrainLoop
+    from repro.train.train import TrainConfig
+
+    if args.smoke:
+        cfg = smoke_config(args.arch)
+    elif args.optimized:
+        cfg = optimized_config(args.arch)
+    else:
+        cfg = get_config(args.arch)
+
+    data = SyntheticLM(DataConfig(
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        vocab=cfg.vocab, accum_steps=args.accum, pad_fraction=0.05,
+        frontend_tokens=cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0,
+        d_model=cfg.d_model,
+    ))
+    loop = TrainLoop(
+        cfg, make_host_mesh(model=args.model_axis),
+        TrainConfig(optimizer=AdamWConfig(lr=args.lr), total_steps=args.steps),
+        data,
+        LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                   ckpt_dir=args.ckpt_dir, lb_sample_every=1,
+                   monitor_app_name=args.arch),
+    )
+    loop.run()
+    h = loop.metrics_history
+    print(f"[launch] {args.arch}: steps {h[0]['step']}..{h[-1]['step']} "
+          f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
+    if args.talp_out:
+        run = loop.finalize_run()
+        run.metadata.update(git_metadata())
+        path = os.path.join(
+            args.talp_out,
+            f"talp_{run.resources.label}_{run.timestamp.replace(':', '')[:17]}.json",
+        )
+        run.save(path)
+        print(f"[launch] TALP record: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,235 @@
+"""Parameter declaration + logical sharding substrate.
+
+Flax-free functional module system: a layer declares its parameters as a
+pytree of ``ParamSpec`` (shape + *logical* axis names + initializer). The
+materializer turns that into (a) an init function and (b) a
+``PartitionSpec`` pytree by mapping logical axes to mesh axes through the
+arch's sharding rules (distributed/sharding.py). Keeping shardings logical
+at the layer level is what lets one model definition serve every
+(arch x mesh x strategy) combination in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[Any, ...]  # logical axis name (or None) per dim
+    init: str = "normal"      # normal | zeros | ones | scaled
+    scale: float | None = None
+    dtype: Any = None         # None -> config param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_param_spec)
+
+
+def init_params(tree, key, param_dtype=jnp.float32):
+    """Materialize a ParamSpec tree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_param_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(spec: ParamSpec, k):
+        dtype = spec.dtype or param_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[0] if spec.shape else 1
+        scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(tree, param_dtype=jnp.float32):
+    """ShapeDtypeStruct tree — for dry-run lowering without allocation."""
+    return _tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype), tree
+    )
+
+
+def param_pspecs(tree, rules: dict[str, Any], mesh=None):
+    """Map logical axes -> mesh axes. ``rules[name]`` may be a mesh axis
+    name, a tuple of axes, or None (replicated). With ``mesh`` given, each
+    dim keeps only the longest prefix of its mapped axes whose product
+    divides the dim size (explicit pjit in_shardings require exact
+    divisibility — e.g. a (5248,) conv bias cannot shard 256 ways)."""
+    sizes = (
+        dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    )
+
+    def to_pspec(spec: ParamSpec):
+        axes = []
+        used: set[str] = set()
+        for dim, name in zip(spec.shape, spec.logical):
+            ax = rules.get(name) if name is not None else None
+            # one mesh axis may appear only once per PartitionSpec
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                flat = tuple(a for a in flat if a not in used)
+                if sizes is not None:
+                    keep = []
+                    prod = 1
+                    for a in flat:
+                        nxt = prod * sizes.get(a, 1)
+                        if dim % nxt == 0:
+                            keep.append(a)
+                            prod = nxt
+                        else:
+                            break
+                    flat = tuple(keep)
+                used.update(flat)
+                ax = flat if flat else None
+                if ax is not None and len(ax) == 1:
+                    ax = ax[0]
+            axes.append(ax)
+        return P(*axes)
+
+    return _tree_map(to_pspec, tree)
+
+
+def count_params(tree) -> int:
+    # pure-python product: jnp.prod overflows int32 on billion-param shapes
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_param_spec):
+        if isinstance(leaf, ParamSpec):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+        else:
+            total += leaf.size
+    return total
+
+
+def spec_bytes(tree, param_dtype=jnp.float32) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_param_spec):
+        if isinstance(leaf, ParamSpec):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n * jnp.dtype(leaf.dtype or param_dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+# ---------------------------------------------------------------------------
+
+
+class LogicalConstraints:
+    """Applies with_sharding_constraint through logical rules; no-op leaves
+    un-mapped axes replicated. Threaded through the model as ``lc``."""
+
+    def __init__(self, mesh, rules: dict[str, Any] | None):
+        self.mesh = mesh
+        self.rules = rules or {}
+
+    def pspec(self, *logical_axes) -> P:
+        axes = []
+        used: set[str] = set()
+        for name in logical_axes:
+            ax = self.rules.get(name) if name is not None else None
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                flat = tuple(a for a in flat if a not in used)
+                used.update(flat)
+                ax = (flat if len(flat) > 1 else (flat[0] if flat else None)) or None
+            axes.append(ax)
+        return P(*axes)
+
+    def __call__(self, x, *logical_axes):
+        if self.mesh is None or not self.rules:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.pspec_for(x.shape, *logical_axes)
+        )
+
+    def pspec_for(self, shape, *logical_axes) -> P:
+        """Shape-aware pspec: per dim, keep the longest prefix of mapped
+        mesh axes whose product divides the dim size (batch=32 over a
+        ("data","model") mapping degrades to ("data",) instead of failing)."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        axes = []
+        used: set[str] = set()
+        for dim, name in zip(shape, logical_axes):
+            ax = self.rules.get(name) if name is not None else None
+            if ax is None:
+                axes.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat if a not in used)
+            keep = []
+            prod = 1
+            for a in flat:
+                nxt = prod * sizes.get(a, 1)
+                if dim % nxt == 0:
+                    keep.append(a)
+                    prod = nxt
+                else:
+                    break
+            used.update(keep)
+            if not keep:
+                axes.append(None)
+            elif len(keep) == 1:
+                axes.append(keep[0])
+            else:
+                axes.append(tuple(keep))
+        return P(*axes)
+
+    def group_count(self, logical_name: str, dim: int) -> int:
+        """Largest product of a prefix of the mapped mesh axes that divides
+        ``dim`` (the shape-aware analogue of axis_size; used by MoE grouped
+        dispatch so microbatched runs keep per-shard-local sorting)."""
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get(logical_name)
+        if ax is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        flat = (ax,) if isinstance(ax, str) else tuple(ax)
+        prod = 1
+        for a in flat:
+            nxt = prod * sizes.get(a, 1)
+            if dim % nxt == 0:
+                prod = nxt
+            else:
+                break
+        return prod
+
+    def axis_size(self, logical_name: str) -> int:
+        """Product of mesh-axis sizes a logical axis maps to (1 if unmapped)."""
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get(logical_name)
+        if ax is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        flat = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in flat:
+            n *= sizes.get(a, 1)
+        return n
+
+
+NULL_CONSTRAINTS = LogicalConstraints(None, None)

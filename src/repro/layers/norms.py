@@ -1,0 +1,39 @@
+"""Normalization layers."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec
+
+
+def rmsnorm_params(d: int, name: str = "scale") -> dict:
+    return {name: ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    """RMSNorm; ``zero_centered`` uses (1+scale) gemma-style."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    s = scale.astype(jnp.float32)
+    if zero_centered:
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layernorm_params(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,473 @@
+"""Recurrent sequence mixers: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+Both implement the *chunkwise-parallel* training form (quadratic only within
+a chunk, linear across chunks — the property that makes long_500k feasible)
+plus a single-token recurrent form for decode. The chunkwise and recurrent
+forms are cross-validated in tests (same output up to fp tolerance).
+
+TPU adaptation notes (DESIGN.md §3/§5):
+  * channels/heads are independent -> the inner dim shards over the
+    "model" mesh axis with zero intra-scan communication (the SSM analogue
+    of tensor parallelism);
+  * chunk length is MXU-friendly (128/256) so the intra-chunk einsums hit
+    the systolic array;
+  * xLSTM stabilizers follow the exponent-shift formulation (running max
+    carried across chunks).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import LogicalConstraints, NULL_CONSTRAINTS, ParamSpec
+
+
+def _segsum(x):
+    """x: (..., L). Returns (..., L, L) with out[i,j] = sum_{k=j+1..i} x_k
+    for i >= j, -inf otherwise (log-space causal decay matrix)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def causal_conv1d(x, w, b=None, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). ``state``: (B,K-1,C)
+    carry for decode; returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    if b is not None:
+        y = y + b[None, None, :]
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_state
+
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+
+
+def mamba2_params(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.d_inner(d)
+    h = s.n_heads(d)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_inner + 2 * s.n_groups * s.d_state + h), ("embed", "inner_all")
+        ),
+        "conv_w": ParamSpec((s.d_conv, conv_ch), (None, "inner"), scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "out_proj": ParamSpec(
+            (d_inner, d), ("inner", "embed_out"),
+            scale=1.0 / (math.sqrt(d_inner) * math.sqrt(2 * cfg.n_layers)),
+        ),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk, init_state=None):
+    """SSD chunkwise scan.
+
+    x: (b,s,h,p)  dt: (b,s,h)  A: (h,) negative  B,C: (b,s,g,n)
+    Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    rep = h // g
+    L = min(chunk, s)
+    nc = s // L
+    assert nc * L == s, (s, L)
+
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = jnp.repeat(B.reshape(b, nc, L, g, n), rep, axis=3)  # (b,nc,L,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, L, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]              # (b,nc,L,h) log decay
+    dA_cs = jnp.cumsum(dA, axis=2)                 # within-chunk cumulative
+
+    # intra-chunk (quadratic in L)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (b,nc,h,L,L)
+    scores = jnp.einsum("bclhn,bcjhn->bchlj", Cc, Bc) * Lmat
+    y_intra = jnp.einsum("bchlj,bcjh,bcjhp->bclhp", scores, dtc, xc)
+
+    # per-chunk summary state: S_c = sum_j exp(dA_end - dA_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (b,nc,L,h)
+    S_chunk = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchpn",
+                         decay_to_end, dtc, Bc, xc)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # (b,nc,h)
+
+    # inter-chunk recurrence
+    def step(state, inp):
+        S_c, dec, Cc_c, dA_cs_c = inp
+        # contribution of the carried state to this chunk's outputs
+        decay_in = jnp.exp(dA_cs_c)                            # (b,L,h)
+        y_prev = jnp.einsum("blhn,blh,bhpn->blhp", Cc_c, decay_in, state)
+        state = state * dec[..., None, None] + S_c
+        return state, y_prev
+
+    state0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    xs = (
+        S_chunk.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+        Cc.transpose(1, 0, 2, 3, 4),
+        dA_cs.transpose(1, 0, 2, 3),
+    )
+    final_state, y_prev = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    y = y_intra + y_prev.transpose(1, 0, 2, 3, 4).reshape(b, nc, L, h, p)
+    return y.reshape(b, s, h, p), final_state
+
+
+def mamba2_block(
+    params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None
+):
+    """Returns (out, new_cache). cache: {"conv": (B,K-1,C), "ssm": (B,h,p,n)}."""
+    s = cfg.ssm
+    Bsz, S, d = x.shape
+    d_inner = s.d_inner(d)
+    h = s.n_heads(d)
+    p = s.head_dim
+    g, n = s.n_groups, s.d_state
+    compute = cfg.compute_dtype
+
+    proj = x @ params["in_proj"].astype(compute)
+    z, xconv_in, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * g * n], axis=-1
+    )
+    conv_state = cache["conv"] if cache is not None else None
+    xconv, new_conv = causal_conv1d(
+        xconv_in, params["conv_w"].astype(compute),
+        params["conv_b"].astype(compute), state=conv_state,
+    )
+    xconv = jax.nn.silu(xconv)
+    xs, B_, C_ = jnp.split(xconv, [d_inner, d_inner + g * n], axis=-1)
+    xs = lc(xs, "batch", None, "inner").reshape(Bsz, S, h, p)
+    B_ = B_.reshape(Bsz, S, g, n).astype(jnp.float32)
+    C_ = C_.reshape(Bsz, S, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (h,) negative
+
+    if cache is not None and S == 1:
+        # recurrent single step
+        state = cache["ssm"].astype(jnp.float32)  # (B,h,p,n)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])    # (B,h)
+        Bh = jnp.repeat(B_[:, 0], h // g, axis=1)  # (B,h,n)
+        Ch = jnp.repeat(C_[:, 0], h // g, axis=1)
+        xf = xs[:, 0].astype(jnp.float32)         # (B,h,p)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, 0], Bh, xf
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, state)[:, None]  # (B,1,h,p)
+        new_ssm = state
+    else:
+        init = cache["ssm"].astype(jnp.float32) if cache is not None else None
+        y, new_ssm = _ssd_chunked(
+            xs.astype(jnp.float32), dt, A, B_, C_, chunk=s.chunk, init_state=init
+        )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(compute)
+
+    # gated RMSNorm (mamba2 style)
+    from repro.layers.norms import rmsnorm
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = lc(y, "batch", None, "inner")
+    out = y @ params["out_proj"].astype(compute)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+    return out, new_cache
+
+
+def mamba2_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ===========================================================================
+
+
+def mlstm_params(cfg) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = x.d_inner(d)
+    h = cfg.n_heads
+    return {
+        "up_proj": ParamSpec((d, 2 * di), ("embed", "inner_all")),
+        "conv_w": ParamSpec((x.d_conv, di), (None, "inner"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "wq": ParamSpec((di, di), ("inner", "inner_q")),
+        "wk": ParamSpec((di, di), ("inner", "inner_q")),
+        "wv": ParamSpec((di, di), ("inner", "inner_q")),
+        "w_if": ParamSpec((di, 2 * h), ("inner", None), scale=0.02),
+        "b_i": ParamSpec((h,), (None,), init="zeros"),
+        "b_f": ParamSpec((h,), (None,), init="ones"),  # forget-bias init > 0
+        "norm": ParamSpec((di,), ("inner",), init="ones"),
+        "down_proj": ParamSpec(
+            (di, d), ("inner", "embed_out"),
+            scale=1.0 / (math.sqrt(di) * math.sqrt(2 * cfg.n_layers)),
+        ),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk, init=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (b,s,h,p); log_i/log_f: (b,s,h). Returns (y, (C,n,m) final).
+    Linear-attention-with-gates; stabilizer m = running max exponent.
+    """
+    b, s, h, p = q.shape
+    L = min(chunk, s)
+    nc = s // L
+    qc = q.reshape(b, nc, L, h, p)
+    kc = k.reshape(b, nc, L, h, p)
+    vc = v.reshape(b, nc, L, h, p)
+    li = log_i.reshape(b, nc, L, h)
+    lf = log_f.reshape(b, nc, L, h)
+    lf_cs = jnp.cumsum(lf, axis=2)                          # (b,nc,L,h)
+
+    # log weight of source j surviving to target t within chunk:
+    # D[t,j] = sum_{k=j+1..t} lf_k + li_j
+    D = _segsum(lf.transpose(0, 1, 3, 2)) + li.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    # (b,nc,h,L,L) log-space
+
+    if init is None:
+        C0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf)
+    else:
+        C0, n0, m0 = init
+
+    def step(carry, inp):
+        C, n, m = carry
+        qq, kk, vv, DD, lf_cs_c, li_c = inp
+        # inter: carried state contributes with decay exp(lf_cs) relative to m
+        b_decay = lf_cs_c  # (b,L,h) log decay from chunk start to t
+        # stabilizer for this chunk: max over (m + decay, max_j D[t,j])
+        m_intra = jnp.max(DD, axis=-1)                      # (b,h,L)
+        m_new_t = jnp.maximum(
+            m[:, :, None] + b_decay.transpose(0, 2, 1), m_intra
+        )  # (b,h,L)
+        # intra contribution
+        w_intra = jnp.exp(DD - m_new_t[..., None])          # (b,h,L,L)
+        s_qk = jnp.einsum("blhp,bjhp->bhlj", qq, kk) / math.sqrt(p)
+        y_num = jnp.einsum("bhlj,bhlj,bjhp->blhp", s_qk, w_intra, vv)
+        y_den = jnp.einsum("bhlj,bhlj->bhl", s_qk, w_intra)
+        # inter contribution
+        w_inter = jnp.exp(m[:, :, None] + b_decay.transpose(0, 2, 1) - m_new_t)
+        y_num = y_num + jnp.einsum(
+            "blhp,bhl,bhpo->blho", qq, w_inter, C
+        ) / math.sqrt(p)
+        y_den = y_den + jnp.einsum("blhp,bhl,bhp->bhl", qq, w_inter, n) / math.sqrt(p)
+        den = jnp.maximum(jnp.abs(y_den), jnp.exp(-m_new_t))  # xlstm denom floor
+        y = y_num / den.transpose(0, 2, 1)[..., None]
+        # state update to end of chunk
+        tot = lf_cs_c[:, -1, :]                              # (b,h)
+        m_end = jnp.maximum(m + tot, jnp.max(DD[:, :, -1, :], axis=-1))
+        # source weights surviving to chunk end
+        w_end = jnp.exp(
+            (lf_cs_c[:, -1:, :] - lf_cs_c + li_c) - m_end[:, None, :]
+        )  # (b,L,h)
+        C = C * jnp.exp(m + tot - m_end)[..., None, None] + jnp.einsum(
+            "blh,blhp,blho->bhpo", w_end, kk, vv
+        )
+        n = n * jnp.exp(m + tot - m_end)[..., None] + jnp.einsum(
+            "blh,blhp->bhp", w_end, kk
+        )
+        return (C, n, m_end), y
+
+    xs = (
+        qc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+        kc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+        vc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+        D.transpose(1, 0, 2, 3, 4),
+        lf_cs.transpose(1, 0, 2, 3),
+        li.transpose(1, 0, 2, 3),
+    )
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, (C, n, m)
+
+
+def mlstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None):
+    xl = cfg.xlstm
+    B, S, d = x.shape
+    di = xl.d_inner(d)
+    h = cfg.n_heads
+    p = di // h
+    compute = cfg.compute_dtype
+
+    up = x @ params["up_proj"].astype(compute)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv1d(
+        xm, params["conv_w"].astype(compute), params["conv_b"].astype(compute),
+        state=conv_state,
+    )
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["wq"].astype(compute)).reshape(B, S, h, p)
+    k = (xc @ params["wk"].astype(compute)).reshape(B, S, h, p)
+    v = (xm @ params["wv"].astype(compute)).reshape(B, S, h, p)
+    gates = xm @ params["w_if"].astype(compute)
+    gi, gf = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,h)
+    log_i = gi + params["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gf + params["b_f"].astype(jnp.float32))
+
+    if cache is not None and S == 1:
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        li, lf = log_i[:, 0], log_f[:, 0]                    # (B,h)
+        m_new = jnp.maximum(lf + m, li)
+        C = C * jnp.exp(lf + m - m_new)[..., None, None] + jnp.exp(li - m_new)[
+            ..., None, None
+        ] * jnp.einsum("bhp,bho->bhpo", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+        n = n * jnp.exp(lf + m - m_new)[..., None] + jnp.exp(li - m_new)[
+            ..., None
+        ] * k[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32) / math.sqrt(p)
+        num = jnp.einsum("bhp,bhpo->bho", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n)), jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]                  # (B,1,h,p)
+        new_state = (C, n, m_new)
+    else:
+        init = (cache["C"], cache["n"], cache["m"]) if cache is not None else None
+        y, new_state = _mlstm_chunked(q, k, v, log_i, log_f, xl.chunk, init=init)
+
+    from repro.layers.norms import rmsnorm
+
+    y = y.reshape(B, S, di).astype(compute)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    y = lc(y, "batch", None, "inner")
+    out = y @ params["down_proj"].astype(compute)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv": new_conv.astype(cache["conv"].dtype),
+            "C": new_state[0], "n": new_state[1], "m": new_state[2],
+        }
+    return out, new_cache
+
+
+def mlstm_cache(cfg, batch: int, dtype) -> dict:
+    xl = cfg.xlstm
+    di = xl.d_inner(cfg.d_model)
+    h = cfg.n_heads
+    p = di // h
+    return {
+        "conv": jnp.zeros((batch, xl.d_conv - 1, di), dtype),
+        "C": jnp.zeros((batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((batch, h, p), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "w_in": ParamSpec((d, 4 * d), ("embed", "inner_all")),  # i,f,z,o pre-acts
+        "r": ParamSpec((h, d // h, 4 * (d // h)), (None, None, None), scale=0.02),
+        "b": ParamSpec((4 * d,), (None,), init="zeros"),
+        "norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+
+
+def slstm_cell(carry, w, h_heads, d_head):
+    """One sLSTM step. carry: (c,n,hprev,m) each (B,h,dh); w: (B,4*d)."""
+    c, n, hprev, m = carry
+    B = w.shape[0]
+    nh = h_heads
+    wi, wf, wz, wo = jnp.split(w, 4, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, nh, d_head)
+
+    i_t = heads(wi).astype(jnp.float32)
+    f_t = heads(wf).astype(jnp.float32)
+    z_t = jnp.tanh(heads(wz).astype(jnp.float32))
+    o_t = jax.nn.sigmoid(heads(wo).astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z_t
+    n = f_p * n + i_p
+    h_new = o_t * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new)
+
+
+def slstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    compute = cfg.compute_dtype
+    w_all = x @ params["w_in"].astype(compute) + params["b"].astype(compute)
+
+    if cache is not None:
+        carry0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        zeros = jnp.zeros((B, nh, dh), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((B, nh, dh), -1e30))
+
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, w_t):
+        _, _, hprev, _ = carry
+        rec = jnp.einsum("bhd,hdk->bhk", hprev, r).reshape(B, 4 * d)
+        carry = slstm_cell(carry, w_t.astype(jnp.float32) + rec, nh, dh)
+        return carry, carry[2]
+
+    if S == 1 and cache is not None:
+        carry, h_seq = step(carry0, w_all[:, 0])
+        ys = h_seq[:, None]                                  # (B,1,nh,dh)
+    else:
+        carry, hs = jax.lax.scan(step, carry0, w_all.transpose(1, 0, 2))
+        ys = hs.transpose(1, 0, 2, 3)                        # (B,S,nh,dh)
+
+    from repro.layers.norms import rmsnorm
+
+    y = rmsnorm(ys.reshape(B, S, d).astype(compute), params["norm"], cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, new_cache
+
+
+def slstm_cache(cfg, batch: int) -> dict:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, nh, dh), -1e30)}

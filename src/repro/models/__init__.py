@@ -1,0 +1,8 @@
+from repro.models import transformer
+from repro.models.flops import (
+    decode_model_flops,
+    prefill_model_flops,
+    train_step_model_flops,
+)
+
+__all__ = ["transformer", "train_step_model_flops", "prefill_model_flops", "decode_model_flops"]

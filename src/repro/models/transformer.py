@@ -1,0 +1,390 @@
+"""Model assembly: pattern-scanned transformer covering all 10 assigned
+architectures (dense / MoE / hybrid-SSM / xLSTM / encoder / VLM backbone).
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.repeats`` times and scanned
+over repeats (compact HLO, correct trip-count accounting in the HLO cost
+analyzer). Per-slot params/caches are stacked over repeats.
+
+Entry points:
+  model_params(cfg)                  ParamSpec tree
+  forward(params, batch, cfg, ...)   logits / loss+aux (train)
+  init_cache(cfg, batch, max_len)    decode cache pytree
+  prefill(params, batch, cfg, ...)   cache fill + last-position logits
+  decode_step(params, batch, ...)    one-token step
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as A
+from repro.layers import ffn as FFN
+from repro.layers import recurrent as R
+from repro.layers.common import LogicalConstraints, NULL_CONSTRAINTS, ParamSpec
+from repro.layers.norms import rmsnorm, rmsnorm_params
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def _slot_params(cfg, kind: str) -> dict:
+    p: dict[str, Any] = {"norm_in": rmsnorm_params(cfg.d_model)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = A.attention_params(cfg)
+        p["norm_mlp"] = rmsnorm_params(cfg.d_model)
+        p["mlp"] = FFN.mlp_params(cfg)
+    elif kind == "moe":
+        p["attn"] = A.attention_params(cfg)
+        p["norm_mlp"] = rmsnorm_params(cfg.d_model)
+        p["moe"] = FFN.moe_params(cfg)
+    elif kind == "mamba2":
+        p["mamba"] = R.mamba2_params(cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = R.mlstm_params(cfg)
+    elif kind == "slstm":
+        p["slstm"] = R.slstm_params(cfg)
+        p["norm_mlp"] = rmsnorm_params(cfg.d_model)
+        p["mlp"] = FFN.mlp_params(
+            cfg, d_ff=int(cfg.d_model * cfg.xlstm.slstm_ff_factor) if cfg.xlstm else cfg.d_ff
+        )
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def _stack(tree, n: int):
+    def f(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (n,) + spec.shape, ("layers",) + spec.logical, spec.init, spec.scale,
+            spec.dtype,
+        )
+
+    return jax.tree_util.tree_map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_params(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_padded
+    params: dict[str, Any] = {}
+    if cfg.frontend != "audio":  # audio stub feeds embeddings directly
+        params["embed"] = ParamSpec((v, d), ("vocab", "embed"), scale=0.02)
+    params["slots"] = {
+        f"slot{i}_{kind}": _stack(_slot_params(cfg, kind), cfg.repeats)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    params["norm_f"] = rmsnorm_params(d)
+    if not cfg.tie_embeddings and not cfg.encoder_only:
+        params["head"] = ParamSpec((d, v), ("embed", "vocab"), scale=1.0 / math.sqrt(d))
+    if cfg.encoder_only:
+        params["head"] = ParamSpec((d, v), ("embed", "vocab"), scale=1.0 / math.sqrt(d))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_slot(
+    slot_params, kind: str, x, cfg, *, positions, lc, cache=None, cache_len=None
+):
+    """One block of the pattern. Returns (x, new_cache, aux)."""
+    aux: dict[str, Any] = {}
+    h = rmsnorm(
+        x, slot_params["norm_in"]["scale"], cfg.norm_eps, cfg.zero_centered_norm
+    )
+    new_cache = None
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.window if kind == "local_attn" else None
+        att_cache = cache.get("attn") if cache else None
+        o, att_new = A.attention_block(
+            slot_params["attn"], h, cfg, positions=positions, lc=lc,
+            causal=not cfg.encoder_only, window=window,
+            cache=att_cache, cache_len=cache_len,
+        )
+        # constrain BEFORE the residual add: the TP partial sums then lower
+        # to reduce-scatter onto the seq-sharded residual instead of a full
+        # f32 all-reduce (16x the bytes, measured on dbrx train_4k)
+        o = lc(o, "batch", "seq", None)
+        x = x + o
+        h2 = rmsnorm(
+            x, slot_params["norm_mlp"]["scale"], cfg.norm_eps, cfg.zero_centered_norm
+        )
+        if kind == "moe":
+            o2, moe_aux = FFN.moe_block(slot_params["moe"], h2, cfg, lc=lc)
+            aux.update(moe_aux)
+        else:
+            o2 = FFN.mlp_block(slot_params["mlp"], h2, cfg, lc=lc)
+        o2 = lc(o2, "batch", "seq", None)
+        x = x + o2
+        if att_new is not None:
+            new_cache = {"attn": att_new}
+    elif kind == "mamba2":
+        o, mcache = R.mamba2_block(
+            slot_params["mamba"], h, cfg, lc=lc, cache=cache.get("mamba") if cache else None
+        )
+        o = lc(o, "batch", "seq", None)
+        x = x + o
+        if mcache is not None:
+            new_cache = {"mamba": mcache}
+    elif kind == "mlstm":
+        o, mcache = R.mlstm_block(
+            slot_params["mlstm"], h, cfg, lc=lc,
+            cache=cache.get("mlstm") if cache else None,
+        )
+        x = x + o
+        if mcache is not None:
+            new_cache = {"mlstm": mcache}
+    elif kind == "slstm":
+        o, scache = R.slstm_block(
+            slot_params["slstm"], h, cfg, lc=lc,
+            cache=cache.get("slstm") if cache else None,
+        )
+        x = x + o
+        h2 = rmsnorm(
+            x, slot_params["norm_mlp"]["scale"], cfg.norm_eps, cfg.zero_centered_norm
+        )
+        x = x + FFN.mlp_block(slot_params["mlp"], h2, cfg, lc=lc)
+        if scache is not None:
+            new_cache = {"slstm": scache}
+    else:
+        raise ValueError(kind)
+    x = lc(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None):
+    """Scan pattern x repeats. caches: {slot_name: stacked cache} or None.
+    Returns (x, new_caches, aux_totals)."""
+    slot_names = list(params["slots"].keys())
+
+    def body(carry, layer_inp):
+        x = carry
+        slot_rows, cache_rows = layer_inp
+        new_cache_rows = {}
+        aux_tot = None
+        for name in slot_names:
+            kind = name.split("_", 1)[1]
+            x, nc, aux = _apply_slot(
+                slot_rows[name], kind, x, cfg, positions=positions, lc=lc,
+                cache=cache_rows.get(name) if cache_rows else None,
+                cache_len=cache_len,
+            )
+            if nc is not None:
+                new_cache_rows[name] = nc
+            if aux:
+                aux_tot = aux if aux_tot is None else jax.tree_util.tree_map(
+                    jnp.add, aux_tot, aux
+                )
+        if aux_tot is None:
+            aux_tot = {}
+        return x, (new_cache_rows, aux_tot)
+
+    body = _remat(body, cfg)
+
+    if cfg.scan_layers and cfg.repeats > 1:
+        xs = (params["slots"], caches if caches else {})
+        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+        aux = jax.tree_util.tree_map(jnp.sum, auxs) if auxs else {}
+        # expert_load should stay per-expert: re-reduce over layers only
+        if auxs and "expert_load" in auxs:
+            aux["expert_load"] = jnp.sum(auxs["expert_load"], axis=0)
+        return x, (new_caches if caches else None), aux
+    else:
+        # unrolled path (small models / remat experiments)
+        new_caches_acc = []
+        aux_acc: dict[str, Any] = {}
+        for r in range(cfg.repeats):
+            slot_rows = jax.tree_util.tree_map(lambda p: p[r], params["slots"])
+            cache_rows = (
+                jax.tree_util.tree_map(lambda c: c[r], caches) if caches else {}
+            )
+            x, (ncr, aux) = body(x, (slot_rows, cache_rows))
+            new_caches_acc.append(ncr)
+            for k, v in aux.items():
+                aux_acc[k] = aux_acc.get(k, 0) + v
+        new_caches = None
+        if caches:
+            new_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_caches_acc
+            )
+        return x, new_caches, aux_acc
+
+
+# ---------------------------------------------------------------------------
+# embedding + head
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg, lc):
+    """batch: dict with optional "tokens" (B,S) and "frontend" (B,P,d)."""
+    parts = []
+    if batch.get("frontend") is not None:
+        parts.append(batch["frontend"].astype(cfg.compute_dtype))
+    if batch.get("tokens") is not None:
+        emb = params["embed"].astype(cfg.compute_dtype)
+        parts.append(emb[batch["tokens"]])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return lc(x, "batch", "seq", None)
+
+
+def _logits(params, x, cfg, lc):
+    if cfg.tie_embeddings:
+        head = params["embed"].T
+    else:
+        head = params["head"]
+    logits = x @ head.astype(cfg.compute_dtype)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return lc(logits, "batch", None, "vocab")
+
+
+def cross_entropy(
+    params, x, labels, cfg, lc, *, seq_chunk: int = 512, z_loss: float | None = None
+):
+    """Chunked CE over the sequence — never materializes (B,S,V) logits.
+    labels: (B,S) int32; negative labels are masked out.
+    Returns (loss_sum, weight_sum, token_count_per_data_shard_proxy)."""
+    B, S, _ = x.shape
+    V = cfg.vocab_padded
+    z_coef = cfg.z_loss if z_loss is None else z_loss
+    seq_chunk = min(seq_chunk, S)
+    n = -(-S // seq_chunk)
+    xpad = A._pad_axis(x, 1, n * seq_chunk)
+    lpad = A._pad_axis(labels, 1, n * seq_chunk, value=-1)
+    xc = xpad.reshape(B, n, seq_chunk, -1).transpose(1, 0, 2, 3)
+    lck = lpad.reshape(B, n, seq_chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xi, li = inp
+        logits = _logits(params, xi, cfg, lc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(li, 0), V, dtype=jnp.float32)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        w = (li >= 0).astype(jnp.float32)
+        nll = (lse - gold) * w
+        zl = z_coef * (lse**2) * w if z_coef else 0.0
+        loss_sum, w_sum = carry
+        return (loss_sum + jnp.sum(nll + zl), w_sum + jnp.sum(w)), None
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    (loss_sum, w_sum), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (xc, lck))
+    return loss_sum, w_sum
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS):
+    """Training/eval forward: returns (loss, aux)."""
+    x = _embed_inputs(params, batch, cfg, lc)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, _, aux = _run_stack(params, x, cfg, positions=positions, lc=lc)
+    x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    x = lc(x, "batch", None, None)
+    loss_sum, w_sum = cross_entropy(params, x, batch["labels"], cfg, lc)
+    loss = loss_sum / jnp.maximum(w_sum, 1.0)
+    if "moe_lb_loss" in aux:
+        loss = loss + cfg.moe_lb_coef * aux["moe_lb_loss"] / cfg.n_layers
+        loss = loss + cfg.moe_z_coef * aux["moe_z_loss"] / cfg.n_layers
+    aux["tokens"] = w_sum
+    return loss, aux
+
+
+def apply_logits(params, batch, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS):
+    """Full-sequence logits (small-model/eval path; materializes (B,S,V))."""
+    x = _embed_inputs(params, batch, cfg, lc)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, _, aux = _run_stack(params, x, cfg, positions=positions, lc=lc)
+    x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    return _logits(params, x, cfg, lc), aux
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    """Stacked decode caches per slot."""
+    dtype = dtype or cfg.compute_dtype
+    caches: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.pattern):
+        name = f"slot{i}_{kind}"
+        if kind in ("attn", "local_attn", "moe"):
+            hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+            c = {
+                "attn": {
+                    "k": jnp.zeros((cfg.repeats, batch, max_len, hkv, hd), dtype),
+                    "v": jnp.zeros((cfg.repeats, batch, max_len, hkv, hd), dtype),
+                }
+            }
+        elif kind == "mamba2":
+            c = {"mamba": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape),
+                R.mamba2_cache(cfg, batch, dtype),
+            )}
+        elif kind == "mlstm":
+            c = {"mlstm": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape),
+                R.mlstm_cache(cfg, batch, dtype),
+            )}
+        elif kind == "slstm":
+            c = {"slstm": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape),
+                R.slstm_cache(cfg, batch),
+            )}
+        else:
+            raise ValueError(kind)
+        caches[name] = c
+    return caches
+
+
+def prefill(params, batch, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINTS):
+    """Run the prompt through the stack filling caches.
+    Returns (last_logits (B,V), new_caches)."""
+    x = _embed_inputs(params, batch, cfg, lc)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, new_caches, _ = _run_stack(
+        params, x, cfg, positions=positions, lc=lc, caches=caches, cache_len=S
+    )
+    x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    logits = _logits(params, x[:, -1:, :], cfg, lc)
+    return logits[:, 0], new_caches
+
+
+def decode_step(
+    params, tokens, pos, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINTS,
+    frontend=None,
+):
+    """One decode step. tokens: (B,1) int32; pos: scalar current position.
+    Returns (logits (B,V), new_caches)."""
+    batch = {"tokens": tokens, "frontend": frontend}
+    x = _embed_inputs(params, batch, cfg, lc)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (B, 1))
+    x, new_caches, _ = _run_stack(
+        params, x, cfg, positions=positions, lc=lc, caches=caches,
+        cache_len=pos + 1,
+    )
+    x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    logits = _logits(params, x, cfg, lc)
+    return logits[:, 0], new_caches

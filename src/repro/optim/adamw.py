@@ -1,0 +1,99 @@
+"""AdamW with fp32 master weights over bf16 params (ZeRO-3 native: optimizer
+state inherits the parameter sharding, so sharded params => sharded state)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True  # fp32 master copy of bf16 params
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros32, params),
+        "v": jax.tree_util.tree_map(zeros32, params),
+    }
+    if cfg.keep_master:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+    lr = cfg.lr * lr_scale
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g32 = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m / b1c
+        vhat = v / b2c
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    masters = state.get("master")
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_master = (
+        jax.tree_util.tree_leaves(masters) if masters is not None else [None] * len(flat_p)
+    )
+    outs = [upd(*t) for t in zip(flat_p, flat_g, flat_m, flat_v, flat_master)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "m": jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]),
+        "v": jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs]),
+    }
+    if masters is not None:
+        new_state["master"] = jax.tree_util.tree_unflatten(
+            treedef, [o[3] for o in outs]
+        )
+    stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+    return new_params, new_state, stats
+
+
+def optimizer_pspecs(param_pspecs, cfg: AdamWConfig):
+    """Optimizer state shardings mirror parameter shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    state = {
+        "step": P(),
+        "m": param_pspecs,
+        "v": param_pspecs,
+    }
+    if cfg.keep_master:
+        state["master"] = param_pspecs
+    return state

@@ -1,0 +1,47 @@
+"""Gradient compression for the cross-pod (DCN) hop.
+
+int8 block quantization with per-block scales: gradients are compressed
+before the pod-level all-reduce (4x fewer DCN bytes for bf16 grads / 2x for
+f32->int8+scale) and decompressed after. Stochastic rounding keeps the
+estimator unbiased. Used by train.train_step when
+``TrainConfig.compress_dcn_grads`` is set; the dry-run shows the DCN
+collective bytes shrinking accordingly (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+def compress_int8(g, key=None):
+    """g: any-shape float array -> (q: int8 (nblocks, BLOCK), scale: f32
+    (nblocks,), meta). Stochastic rounding when a key is given."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    flat, true_n = _pad_to(flat, BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    x = blocks / scale[:, None]
+    if key is not None:
+        noise = jax.random.uniform(key, x.shape) - 0.5
+        q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    return q, scale, (g.shape, true_n)
+
+
+def decompress_int8(q, scale, meta, dtype=jnp.float32):
+    shape, true_n = meta
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:true_n]
+    return flat.reshape(shape).astype(dtype)

@@ -1,0 +1,12 @@
+from repro.serve.serve import (
+    ServeConfig,
+    make_decode_step,
+    make_prefill_step,
+    serve_cache_pspecs,
+    BatchScheduler,
+)
+
+__all__ = [
+    "ServeConfig", "make_decode_step", "make_prefill_step",
+    "serve_cache_pspecs", "BatchScheduler",
+]

@@ -1,0 +1,7 @@
+from repro.train.train import TrainConfig, TrainState, make_train_step, train_state_pspecs
+from repro.train.loop import TrainLoop, LoopConfig
+
+__all__ = [
+    "TrainConfig", "TrainState", "make_train_step", "train_state_pspecs",
+    "TrainLoop", "LoopConfig",
+]

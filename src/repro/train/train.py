@@ -1,0 +1,195 @@
+"""Distributed train step.
+
+* gradient accumulation as a ``lax.scan`` over microbatches (XLA's
+  latency-hiding scheduler overlaps each microbatch's gradient psum with the
+  next microbatch's backward);
+* AdamW with fp32 master + ZeRO-3-style sharded optimizer state;
+* optional int8 gradient compression for the cross-pod (DCN) hop;
+* emits the monitor's per-step observables: real-token counts per data
+  shard (data load balance) and MoE expert loads (expert load balance) —
+  the paper's on-the-fly measurements, produced by the step itself at
+  O(shards + experts) extra bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as SH
+from repro.layers.common import LogicalConstraints, param_pspecs
+from repro.models import transformer as T
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    optimizer_pspecs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    accum_steps: int = 1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_dcn_grads: bool = False
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: Any
+
+    def tree(self):
+        return {"params": self.params, "opt_state": self.opt_state, "step": self.step}
+
+
+def init_state(cfg, tcfg: TrainConfig, key) -> TrainState:
+    from repro.layers.common import init_params
+
+    params = init_params(T.model_params(cfg), key, cfg.param_dtype)
+    opt = adamw_init(params, tcfg.optimizer)
+    return TrainState(params=params, opt_state=opt, step=jnp.zeros((), jnp.int32))
+
+
+def train_state_pspecs(cfg, mesh, tcfg: TrainConfig):
+    rules = SH.param_rules(cfg, mesh)
+    pp = param_pspecs(T.model_params(cfg), rules, mesh)
+    return {
+        "params": pp,
+        "opt_state": optimizer_pspecs(pp, tcfg.optimizer),
+        "step": jax.sharding.PartitionSpec(),
+    }
+
+
+def _tokens_per_shard(labels, n_shards: int):
+    """Real (non-pad) token count per data shard — the data-LB observable.
+    labels: (B,S); the batch dim is sharded over exactly ``n_shards``."""
+    B = labels.shape[0]
+    if n_shards <= 1 or B % n_shards:
+        return jnp.sum(labels >= 0).reshape(1).astype(jnp.float32)
+    g = labels.reshape(n_shards, B // n_shards, -1)
+    return jnp.sum(g >= 0, axis=(1, 2)).astype(jnp.float32)
+
+
+def make_train_step(cfg, mesh, tcfg: TrainConfig):
+    """Returns train_step(state_tree, batch) -> (state_tree, metrics).
+
+    batch: {"tokens": (A, B, S), "labels": (A, B, S)[, "frontend": (A,B,P,d)]}
+    where A = accum_steps (A=1 means the leading dim is still present).
+    """
+    lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+    n_data_shards = SH.data_shards(mesh)
+    # grad-accumulation carry must shard like the params — otherwise the
+    # f32 accumulator materializes replicated (30B params -> 122 GB/device)
+    grad_pspecs = param_pspecs(T.model_params(cfg), SH.param_rules(cfg, mesh), mesh)
+
+    def constrain_grads(g):
+        if mesh is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda x, p: jax.lax.with_sharding_constraint(x, p), g, grad_pspecs
+        )
+
+    def loss_fn(params, mb):
+        loss, aux = T.forward(params, mb, cfg, lc)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params, opt_state, step = state["params"], state["opt_state"], state["step"]
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (loss, aux), grads = grad_fn(params, mb)
+            gsum = constrain_grads(jax.tree_util.tree_map(jnp.add, gsum, grads))
+            keep = {
+                k: aux[k]
+                for k in ("expert_load", "tokens", "moe_lb_loss")
+                if k in aux
+            }
+            keep["tokens_per_shard"] = _tokens_per_shard(mb["labels"], n_data_shards)
+            return (gsum, lsum + loss), keep
+
+        zeros = constrain_grads(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        ))
+        A = batch["labels"].shape[0]
+        if A == 1:
+            (grads, loss_sum), aux = micro(
+                (zeros, 0.0),
+                jax.tree_util.tree_map(lambda x: x[0], batch),
+            )
+        else:
+            (grads, loss_sum), auxs = jax.lax.scan(micro, (zeros, 0.0), batch)
+            aux = jax.tree_util.tree_map(lambda x: jnp.sum(x, axis=0), auxs)
+        inv = 1.0 / A
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+
+        if tcfg.compress_dcn_grads:
+            # quantize/dequantize gradients (the DCN all-reduce then moves
+            # int8 blocks; on a single-pod mesh this is a numerical no-op
+            # knob measured by the §Perf pass)
+            from repro.optim import compress_int8, decompress_int8
+
+            def roundtrip(g):
+                q, s, meta = compress_int8(g)
+                return decompress_int8(q, s, meta, jnp.float32)
+
+            grads = jax.tree_util.tree_map(roundtrip, grads)
+
+        lr_scale = cosine_schedule(
+            step, warmup=tcfg.warmup_steps, total=tcfg.total_steps
+        )
+        new_params, new_opt, stats = adamw_update(
+            params, grads, opt_state, tcfg.optimizer, lr_scale
+        )
+        metrics = {
+            "loss": loss,
+            "grad_norm": stats["grad_norm"],
+            "lr": stats["lr"],
+            **(aux or {}),
+        }
+        new_state = {"params": new_params, "opt_state": new_opt, "step": step + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, mesh, tcfg: TrainConfig, donate: bool = True):
+    """pjit-wrapped step with explicit in/out shardings."""
+    from jax.sharding import NamedSharding
+
+    step_fn = make_train_step(cfg, mesh, tcfg)
+    sp = train_state_pspecs(cfg, mesh, tcfg)
+    to_sharding = lambda tree: jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree
+    )
+    state_sh = to_sharding(sp)
+    bp = SH.batch_pspec(cfg, mesh)
+
+    def batch_sharding(batch_tree):
+        def f(x):
+            # (A, B, ...): microbatch dim replicated, batch dim sharded
+            spec = [None, bp[0]] + [None] * (len(x.shape) - 2)
+            return NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+
+        return jax.tree_util.tree_map(f, batch_tree)
+
+    def wrapper(batch_tree):
+        return jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sharding(batch_tree)),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    return wrapper

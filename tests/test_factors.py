@@ -1,0 +1,156 @@
+"""POP factor hierarchy: identities, adaptation semantics, edge cases."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import factors as F
+from repro.core.hardware import TPU_V5E, TPU_V5P
+from repro.core.records import (
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+)
+
+
+def region(flops=1e12, bytes_=1e11, ici=1e9, dcn=0.0, elapsed=10.0,
+           device=9.0, data_lb=None, expert_lb=None, host_lb=None,
+           in_pod=None, inter_pod=None, model_flops=0.0, steps=10):
+    return RegionRecord(
+        name="r",
+        measurements=RegionMeasurements(
+            elapsed_s=elapsed, num_visits=1, num_steps=steps,
+            device_time_s=device, data_lb=data_lb, expert_lb=expert_lb,
+            host_lb=host_lb, in_pod_lb=in_pod, inter_pod_lb=inter_pod,
+        ),
+        counters=RegionCounters(
+            useful_flops=flops, hlo_bytes=bytes_,
+            collective_bytes_ici=ici, collective_bytes_dcn=dcn,
+            model_flops=model_flops,
+        ),
+    )
+
+
+RES = ResourceConfig(num_hosts=4, devices_per_host=4)
+
+
+nonneg = st.floats(min_value=0.0, max_value=1e18, allow_nan=False)
+lb01 = st.one_of(st.none(), st.floats(min_value=1e-3, max_value=1.0))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    flops=nonneg, bytes_=nonneg, ici=nonneg, dcn=nonneg,
+    elapsed=st.floats(min_value=1e-6, max_value=1e6),
+    device=st.floats(min_value=0.0, max_value=1e6),
+    data_lb=lb01, expert_lb=lb01, host_lb=lb01,
+    overlap=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_identities_hold_for_any_input(
+    flops, bytes_, ici, dcn, elapsed, device, data_lb, expert_lb, host_lb, overlap
+):
+    r = region(flops, bytes_, ici, dcn, elapsed, device,
+               data_lb, expert_lb, host_lb)
+    pop = F.compute_pop(r, RES, TPU_V5E, overlap_fraction=overlap)
+    assert F.validate_pop(pop) == []
+    # efficiencies of the parallel branch live in [0, 1]
+    for key in (F.PARALLEL_EFF, F.DISPATCH_EFF, F.COMM_EFF, F.ICI_COMM_EFF,
+                F.DCN_COMM_EFF, F.LOAD_BALANCE):
+        assert -1e-9 <= pop[key] <= 1.0 + 1e-9, (key, pop[key])
+
+
+def test_comm_efficiency_splits_multiplicatively():
+    r = region(flops=1e15, bytes_=1e12, ici=5e10, dcn=2e10)
+    pop = F.absolute_factors(r, RES, TPU_V5E)
+    assert pop[F.COMM_EFF] == pytest.approx(
+        pop[F.ICI_COMM_EFF] * pop[F.DCN_COMM_EFF]
+    )
+    # more collective bytes => lower comm efficiency
+    r2 = region(flops=1e15, bytes_=1e12, ici=5e11, dcn=2e10)
+    pop2 = F.absolute_factors(r2, RES, TPU_V5E)
+    assert pop2[F.COMM_EFF] < pop[F.COMM_EFF]
+
+
+def test_no_collectives_means_perfect_comm_eff():
+    pop = F.absolute_factors(region(ici=0.0, dcn=0.0), RES, TPU_V5E)
+    assert pop[F.COMM_EFF] == 1.0
+
+
+def test_overlap_fraction_raises_comm_eff():
+    r = region(ici=1e11)
+    e0 = F.absolute_factors(r, RES, TPU_V5E, overlap_fraction=0.0)[F.COMM_EFF]
+    e5 = F.absolute_factors(r, RES, TPU_V5E, overlap_fraction=0.5)[F.COMM_EFF]
+    e1 = F.absolute_factors(r, RES, TPU_V5E, overlap_fraction=1.0)[F.COMM_EFF]
+    assert e0 < e5 < e1 == 1.0
+
+
+def test_dispatch_efficiency_measures_host_stall():
+    busy = F.absolute_factors(region(elapsed=10.0, device=10.0), RES, TPU_V5E)
+    stalled = F.absolute_factors(region(elapsed=10.0, device=5.0), RES, TPU_V5E)
+    assert busy[F.DISPATCH_EFF] == pytest.approx(1.0)
+    assert stalled[F.DISPATCH_EFF] == pytest.approx(0.5)
+
+
+def test_scaling_mode_detection_follows_paper_rule():
+    # weak: flops per device constant
+    runs = [
+        (region(flops=1e12), ResourceConfig(1, 4)),
+        (region(flops=2e12), ResourceConfig(2, 4)),
+    ]
+    assert F.detect_scaling_mode(runs) == F.WEAK
+    # strong: total flops constant
+    runs = [
+        (region(flops=1e12), ResourceConfig(1, 4)),
+        (region(flops=1.05e12), ResourceConfig(2, 4)),
+    ]
+    assert F.detect_scaling_mode(runs) == F.STRONG
+
+
+def test_strong_scaling_flop_inflation_is_inefficiency():
+    ref = (region(flops=1e12, device=10.0), ResourceConfig(1, 4))
+    # doubled executed flops on the same problem => flop_scaling 0.5
+    cur = region(flops=2e12, device=10.0)
+    sc = F.scalability_factors(cur, ResourceConfig(2, 4), *ref, mode=F.STRONG)
+    assert sc[F.FLOP_SCALING] == pytest.approx(0.5)
+    # frequency scaling is identity on TPU
+    assert sc[F.FREQUENCY_SCALING] == 1.0
+
+
+def test_throughput_scaling_relative_flop_rate():
+    ref_r = region(flops=1e12, device=10.0)   # 1e11/dev/s on 1x4
+    cur = region(flops=1e12, device=2.5)      # on 2x4: 5e10... compute directly
+    sc = F.scalability_factors(
+        cur, ResourceConfig(2, 4), ref_r, ResourceConfig(1, 4), mode=F.STRONG
+    )
+    # cur: 1e12/(8*2.5)=5e10 ; ref: 1e12/(4*10)=2.5e10 -> 2x
+    assert sc[F.THROUGHPUT_SCALING] == pytest.approx(2.0)
+
+
+def test_spec_independence_of_measured_factors():
+    """Hardware spec changes modeled comm terms but not measured LBs."""
+    r = region(data_lb=0.9, expert_lb=0.8)
+    a = F.absolute_factors(r, RES, TPU_V5E)
+    b = F.absolute_factors(r, RES, TPU_V5P)
+    assert a[F.DATA_LB] == b[F.DATA_LB] == 0.9
+    assert a[F.EXPERT_LB] == b[F.EXPERT_LB] == 0.8
+    assert a[F.COMM_EFF] != b[F.COMM_EFF]  # modeled: spec-dependent
+
+
+def test_host_lb_split_composes():
+    r = region(in_pod=0.9, inter_pod=0.8)
+    pop = F.absolute_factors(r, RES, TPU_V5E)
+    assert pop[F.HOST_LB] == pytest.approx(0.72)
+
+
+def test_flop_usefulness_exposes_remat_waste():
+    r = region(flops=4e12, model_flops=3e12)
+    pop = F.absolute_factors(r, RES, TPU_V5E)
+    assert pop[F.FLOP_USEFULNESS] == pytest.approx(0.75)
+
+
+def test_tree_iteration_covers_display_names():
+    for key, depth in F.iter_tree():
+        assert key in F.DISPLAY_NAMES
+        assert depth <= 4

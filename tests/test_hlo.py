@@ -1,0 +1,115 @@
+"""HLO-text cost analyzer: exactness on loop-free graphs, loop
+multiplicities, collective classification."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hlo as H
+
+
+def test_shape_parsing():
+    assert H.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert H.shape_bytes("bf16[3]{0}") == 6
+    assert H.shape_bytes("(f32[2,2], s8[4]{0})") == 16 + 4
+    assert H.shape_bytes("pred[]") == 1
+    assert H.shape_elems("f32[0]{0}") == 0
+    # tuple with /*index=N*/ comments (the real-HLO format)
+    t = "(s32[], bf16[16,256]{1,0}, /*index=5*/f32[4]{0})"
+    assert H.shape_bytes(t) == 4 + 16 * 256 * 2 + 16
+
+
+def test_instr_line_parser_handles_index_comments():
+    line = ("  %while.485 = (s32[], bf16[16,256]{1,0}, /*index=5*/f32[4]{0}) "
+            "while(%tuple.392), condition=%c, body=%b, "
+            'backend_config={"known_trip_count":{"n":"22"}}')
+    instr = H._parse_instr_line(line)
+    assert instr is not None and instr.op == "while"
+    assert H._trip_count(instr) == 22.0
+    assert H._called_comps(instr) == ["b", "c"] or set(
+        H._called_comps(instr)) == {"b", "c"}
+
+
+def test_loop_free_dot_flops_match_xla():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    cost = H.analyze_hlo(compiled.as_text())
+    assert cost.dot_flops == 2 * 128 * 256 * 512
+    xla = H.xla_cost_analysis(compiled).get("flops", 0)
+    assert abs(cost.flops - xla) / xla < 0.05
+
+
+def test_scan_multiplies_by_trip_count():
+    N = 7
+
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, ws)[0].sum()
+
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((N, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, ws).compile()
+    cost = H.analyze_hlo(compiled.as_text())
+    assert cost.dot_flops == N * 2 * 16 * 64 * 64
+    assert cost.max_while_trip_count == N
+    # XLA's own analysis undercounts while bodies — ours must exceed it
+    xla = H.xla_cost_analysis(compiled).get("flops", 0)
+    assert cost.flops > xla
+
+
+def test_replica_group_iota_materialization():
+    class FakeInstr:
+        rest = "replica_groups=[4,2]<=[2,4]T(1,0), use_global_device_ids=true"
+    groups = H.parse_replica_groups(FakeInstr())
+    assert groups == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+    class Explicit:
+        rest = "replica_groups={{0,1},{2,3}}, bla"
+    assert H.parse_replica_groups(Explicit()) == [[0, 1], [2, 3]]
+
+
+def test_dcn_classification():
+    # groups crossing the pod boundary (pod size 4)
+    assert H.groups_cross_pod([[0, 4]], 4) is True
+    assert H.groups_cross_pod([[0, 1, 2, 3]], 4) is False
+    assert H.groups_cross_pod([[0, 1]], None) is False
+
+
+def test_collective_cost_conventions():
+    hlo = textwrap.dedent("""\
+        HloModule m, num_partitions=4
+        ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+          %p = f32[8,8]{1,0} parameter(0)
+          %ag = f32[8,8]{1,0} all-gather(%p), replica_groups=[1,4]<=[4], dimensions={0}
+          ROOT %ar = f32[8,8]{1,0} all-reduce(%ag), replica_groups=[1,4]<=[4], to_apply=%add
+        }
+    """)
+    cost = H.analyze_hlo(hlo)
+    kinds = {c.kind: c for c in cost.collectives}
+    # all-gather: operand = result/group
+    assert kinds["all-gather"].operand_bytes == 8 * 8 * 4 / 4
+    # all-reduce: operand = result; ring wire = 2(g-1)/g * operand
+    ar = kinds["all-reduce"]
+    assert ar.operand_bytes == 8 * 8 * 4
+    assert ar.wire_bytes == pytest.approx(2 * (3 / 4) * 8 * 8 * 4)
+
+
+def test_fusion_bodies_do_not_double_count_bytes():
+    def f(a):
+        return jnp.tanh(a) * 2.0 + 1.0  # fuses into one kernel
+
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    compiled = jax.jit(f).lower(a).compile()
+    cost = H.analyze_hlo(compiled.as_text())
+    nbytes = 1024 * 1024 * 4
+    # in + out, allow some slack for copies
+    assert nbytes * 1.5 <= cost.hbm_bytes <= nbytes * 4

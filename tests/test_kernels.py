@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_reference
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(B, Sq, Sk, Hq, Hkv, D, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, Sq, Hq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, Sk, Hkv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, Sk, Hkv, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, Hq, Hkv, D, causal, window, softcap
+    (2, 256, 256, 4, 2, 64, True, None, None),
+    (1, 128, 128, 4, 4, 64, False, None, None),
+    (1, 256, 256, 2, 1, 64, True, 64, None),      # sliding window
+    (2, 64, 64, 8, 2, 32, True, None, 30.0),      # softcap (gemma2)
+    (1, 200, 200, 2, 2, 48, True, None, None),    # non-multiple-of-block seq
+    (1, 96, 96, 2, 1, 100, False, 32, 50.0),      # padding in D + win + cap
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c[:6]) for c in FLASH_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(case, dtype):
+    B, Sq, Sk, Hq, Hkv, D, causal, window, softcap = case
+    q, k, v = _qkv(B, Sq, Sk, Hq, Hkv, D, dtype)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=64, block_kv=64, interpret=True,
+    )
+    ref = attention_reference(q, k, v, causal=causal, window=window, softcap=softcap)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_block_shape_independence():
+    """Block size is a tuning knob — results must not depend on it."""
+    q, k, v = _qkv(1, 192, 192, 2, 2, 64, jnp.float32)
+    outs = [
+        flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_kv=bk,
+                               interpret=True)
+        for bq, bk in [(32, 32), (64, 128), (128, 64)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+
+def test_flash_matches_model_flash_path():
+    """The model's chunked-scan attention and the kernel agree (so the
+    kernel can be swapped in on TPU without changing semantics)."""
+    from repro.layers.attention import flash_attention as model_flash
+
+    q, k, v = _qkv(2, 128, 128, 4, 2, 64, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    a = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                               interpret=True)
+    b = model_flash(q, k, v, q_positions=pos, k_positions=pos, causal=True,
+                    q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+RMS_CASES = [(4, 128), (3, 300), (1, 1024), (17, 96)]
+
+
+@pytest.mark.parametrize("rows,d", RMS_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("zero_centered", [False, True])
+def test_rmsnorm_matches_reference(rows, d, dtype, zero_centered):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (rows, d), jnp.float32).astype(dtype)
+    s = jax.random.normal(k2, (d,), jnp.float32)
+    out = rmsnorm_pallas(x, s, zero_centered=zero_centered, block_rows=64,
+                         interpret=True)
+    ref = rmsnorm_reference(x, s, zero_centered=zero_centered)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_rmsnorm_3d_shape():
+    x = jax.random.normal(KEY, (2, 5, 256), jnp.float32)
+    s = jnp.ones((256,))
+    out = rmsnorm_pallas(x, s, interpret=True)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(rmsnorm_reference(x, s)), atol=1e-5
+    )
+
+
+def test_ops_wrappers_route_to_reference_on_cpu():
+    from repro.kernels import flash_attention, rmsnorm
+
+    q, k, v = _qkv(1, 64, 64, 2, 2, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    x = jax.random.normal(KEY, (4, 128))
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, jnp.ones(128))),
+        np.asarray(rmsnorm_reference(x, jnp.ones(128))), atol=1e-6,
+    )
+
+
+def test_flash_fully_masked_block_with_negative_scores():
+    """Regression: a fully-masked kv block must not poison the running max.
+
+    With true row maxima << 0, returning a 0-sentinel from the masked block
+    made max(m,0)=0 underflow the rescale factor, collapsing l to zero —
+    silently wrong outputs and NaN gradients (hit by any multi-block causal
+    run at init scale). The block must report its TRUE masked max.
+    """
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32)) * 40   # |scores| ~ 1e3
+    k = jax.random.normal(ks[1], (2, 128, 2, 32)) * 40
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    from repro.layers.attention import flash_attention as model_flash
+
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    ref = attention_reference(q, k, v, causal=True)
+    for skip in (False, True):
+        def loss(q):
+            o = model_flash(q, k, v, q_positions=pos, k_positions=pos,
+                            causal=True, q_chunk=64, kv_chunk=64,
+                            causal_skip=skip)
+            return jnp.sum(o.astype(jnp.float32) ** 2)
+
+        out = model_flash(q, k, v, q_positions=pos, k_positions=pos,
+                          causal=True, q_chunk=64, kv_chunk=64,
+                          causal_skip=skip)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4)
+        g = jax.grad(loss)(q)
+        assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,122 @@
+"""Run-record schema: roundtrip, atomicity, folder conventions."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import folder as FD
+from repro.core.records import (
+    GLOBAL_REGION,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+
+finite = st.floats(min_value=0, max_value=1e15, allow_nan=False)
+
+
+def make_run(label=(1, 4), ts="2026-07-13T10:00:00", app="app", **meta):
+    r = RunRecord(
+        app_name=app,
+        resources=ResourceConfig(num_hosts=label[0], devices_per_host=label[1]),
+        timestamp=ts,
+        metadata=dict(meta),
+    )
+    r.regions[GLOBAL_REGION] = RegionRecord(
+        name=GLOBAL_REGION,
+        measurements=RegionMeasurements(elapsed_s=1.0, num_steps=5),
+        counters=RegionCounters(useful_flops=1e9),
+        pop={"parallel_efficiency": 0.9},
+    )
+    return r
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    elapsed=finite, flops=finite, steps=st.integers(0, 10**9),
+    data_lb=st.one_of(st.none(), st.floats(0, 1)),
+)
+def test_json_roundtrip(elapsed, flops, steps, data_lb):
+    run = make_run()
+    run.regions["timestep"] = RegionRecord(
+        name="timestep",
+        measurements=RegionMeasurements(
+            elapsed_s=elapsed, num_steps=steps, data_lb=data_lb
+        ),
+        counters=RegionCounters(useful_flops=flops),
+    )
+    back = RunRecord.from_json(run.to_json())
+    t = back.regions["timestep"]
+    assert t.measurements.elapsed_s == elapsed
+    assert t.measurements.num_steps == steps
+    assert t.measurements.data_lb == data_lb
+    assert t.counters.useful_flops == flops
+    assert back.resources.label == run.resources.label
+
+
+def test_save_is_atomic(tmp_path):
+    run = make_run()
+    path = tmp_path / "a" / "run.json"
+    run.save(path)
+    assert not os.path.exists(str(path) + ".tmp")
+    assert RunRecord.load(path).app_name == "app"
+
+
+def test_newer_schema_rejected():
+    d = make_run().to_json()
+    d["schema_version"] = 99
+    with pytest.raises(ValueError):
+        RunRecord.from_json(d)
+
+
+def test_series_timestamp_prefers_git_commit_time():
+    run = make_run(ts="2026-07-13T10:00:00",
+                   git_commit_timestamp="2026-07-01T00:00:00")
+    assert run.series_timestamp == "2026-07-01T00:00:00"
+    assert make_run().series_timestamp == "2026-07-13T10:00:00"
+
+
+def test_folder_scan_finds_experiments(tmp_path):
+    make_run().save(tmp_path / "mesh1" / "strong" / "a.json")
+    make_run().save(tmp_path / "mesh1" / "strong" / "b.json")
+    make_run().save(tmp_path / "mesh2" / "weak" / "c.json")
+    (tmp_path / "mesh2" / "empty").mkdir(parents=True)
+    exps = FD.scan(str(tmp_path))
+    assert sorted(e.rel_path for e in exps) == [
+        os.path.join("mesh1", "strong"), os.path.join("mesh2", "weak")
+    ]
+    assert len(exps[0].runs) == 2
+
+
+def test_folder_scan_tolerates_foreign_json(tmp_path):
+    make_run().save(tmp_path / "exp" / "good.json")
+    (tmp_path / "exp" / "bad.json").write_text("{not json")
+    (tmp_path / "exp" / "other.json").write_text('{"foo": 1}')
+    exps = FD.scan(str(tmp_path))
+    # bad file skipped, "other" parses as empty run record
+    assert len(exps) == 1 and len(exps[0].runs) >= 1
+
+
+def test_merge_history_never_overwrites(tmp_path):
+    cur, hist = tmp_path / "cur", tmp_path / "hist"
+    make_run(app="new").save(cur / "exp" / "run1.json")
+    make_run(app="old").save(hist / "exp" / "run1.json")
+    make_run(app="old2").save(hist / "exp" / "run0.json")
+    merged = FD.merge_history(str(hist), str(cur))
+    assert merged == 1
+    assert RunRecord.load(cur / "exp" / "run1.json").app_name == "new"
+    assert RunRecord.load(cur / "exp" / "run0.json").app_name == "old2"
+
+
+def test_add_metadata_is_idempotent_and_non_clobbering(tmp_path):
+    make_run(git_commit="keepme").save(tmp_path / "e" / "r.json")
+    n = FD.add_metadata(str(tmp_path), {"git_commit": "new", "ci": "yes"})
+    assert n == 1
+    run = RunRecord.load(tmp_path / "e" / "r.json")
+    assert run.metadata["git_commit"] == "keepme"
+    assert run.metadata["ci"] == "yes"
+    assert FD.add_metadata(str(tmp_path), {"ci": "yes"}) == 0

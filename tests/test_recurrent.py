@@ -1,0 +1,103 @@
+"""Chunkwise-parallel vs recurrent equivalence for Mamba2 SSD and xLSTM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import recurrent as R
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_ssd_chunked_matches_stepwise():
+    b, s, h, p, n, chunk = 2, 64, 4, 8, 16, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (b, s, 1, n))
+    C_ = jax.random.normal(ks[4], (b, s, 1, n))
+
+    y_chunk, state_chunk = R._ssd_chunked(x, dt, A, B_, C_, chunk)
+
+    # stepwise recurrence oracle
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    Bh = jnp.repeat(B_, h, axis=2)
+    Ch = jnp.repeat(C_, h, axis=2)
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A[None, :])  # (b,h)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Bh[:, t], x[:, t]
+        )
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    b, s, h, p, n = 1, 48, 2, 4, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    B_ = jax.random.normal(ks[3], (b, s, 1, n))
+    C_ = jax.random.normal(ks[4], (b, s, 1, n))
+    y1, _ = R._ssd_chunked(x, dt, A, B_, C_, chunk=16)
+    y2, _ = R._ssd_chunked(x, dt, A, B_, C_, chunk=48)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_mlstm_chunked_matches_stepwise():
+    b, s, h, p, chunk = 1, 32, 2, 8, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, p))
+    k = jax.random.normal(ks[1], (b, s, h, p))
+    v = jax.random.normal(ks[2], (b, s, h, p))
+    log_i = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 1.0)
+
+    y_chunk, (C_c, n_c, m_c) = R._mlstm_chunked(q, k, v, log_i, log_f, chunk)
+
+    # stepwise stabilized recurrence oracle
+    import math
+    C = jnp.zeros((b, h, p, p))
+    n = jnp.zeros((b, h, p))
+    m = jnp.full((b, h), -jnp.inf)
+    ys = []
+    for t in range(s):
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        alpha = jnp.exp(lf + m - m_new)
+        alpha = jnp.where(jnp.isinf(m)[..., None] if False else jnp.isneginf(m), 0.0, alpha)
+        C = C * alpha[..., None, None] + jnp.exp(li - m_new)[..., None, None] * jnp.einsum(
+            "bhp,bho->bhpo", k[:, t], v[:, t])
+        n = n * alpha[..., None] + jnp.exp(li - m_new)[..., None] * k[:, t]
+        qf = q[:, t] / math.sqrt(p)
+        num = jnp.einsum("bhp,bhpo->bho", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n)), jnp.exp(-m_new))
+        ys.append(num / den[..., None])
+        m = m_new
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(m), atol=1e-5)
+
+
+def test_causal_conv_state_carry():
+    b, s, c, k = 2, 12, 6, 4
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (b, s, c))
+    w = jax.random.normal(ks[1], (k, c))
+    y_full, _ = R.causal_conv1d(x, w)
+    # split into two halves with state carry
+    y1, st = R.causal_conv1d(x[:, :7], w, state=jnp.zeros((b, k - 1, c)))
+    y2, _ = R.causal_conv1d(x[:, 7:], w, state=st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)), np.asarray(y_full),
+        atol=1e-5,
+    )

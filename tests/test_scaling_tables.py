@@ -1,0 +1,97 @@
+"""Scaling-efficiency table construction rules (paper §Scaling-efficiency)."""
+
+import pytest
+
+from repro.core import factors as F
+from repro.core import scaling as S
+from repro.core.records import (
+    GLOBAL_REGION,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+
+
+def run(hosts, devs, flops, ts="2026-07-13T10:00:00", device_s=10.0):
+    r = RunRecord(
+        app_name="a",
+        resources=ResourceConfig(num_hosts=hosts, devices_per_host=devs),
+        timestamp=ts,
+    )
+    r.regions[GLOBAL_REGION] = RegionRecord(
+        name=GLOBAL_REGION,
+        measurements=RegionMeasurements(
+            elapsed_s=device_s * 1.1, num_steps=10, device_time_s=device_s
+        ),
+        counters=RegionCounters(useful_flops=flops, hlo_bytes=flops / 100,
+                                collective_bytes_ici=flops / 1000),
+    )
+    return r
+
+
+def test_latest_per_config_wins():
+    runs = [
+        run(1, 4, 1e12, ts="2026-07-01T00:00:00"),
+        run(1, 4, 2e12, ts="2026-07-02T00:00:00"),
+        run(2, 4, 1e12),
+    ]
+    latest = S.latest_per_config(runs)
+    assert len(latest) == 2
+    assert latest[0].regions[GLOBAL_REGION].counters.useful_flops == 2e12
+
+
+def test_reference_is_least_resources():
+    t = S.build_table([run(4, 4, 1e12), run(1, 4, 1e12), run(2, 4, 1e12)])
+    assert t.columns[0].is_reference
+    assert t.columns[0].label == "1x4"
+    assert [c.label for c in t.columns] == ["1x4", "2x4", "4x4"]
+
+
+def test_reference_column_has_identity_scalability():
+    t = S.build_table([run(1, 4, 1e12), run(2, 4, 1.25e12)])
+    ref = t.columns[0].pop
+    assert ref[F.COMP_SCALABILITY] == pytest.approx(1.0)
+    assert ref[F.FLOP_SCALING] == pytest.approx(1.0)
+    # strong scaling: flop inflation 1.25x -> scaling 0.8
+    assert t.columns[1].pop[F.FLOP_SCALING] == pytest.approx(0.8)
+    assert t.mode == F.STRONG
+
+
+def test_weak_scaling_uses_per_device_instructions():
+    t = S.build_table([run(1, 4, 1e12), run(2, 4, 2.1e12)])
+    assert t.mode == F.WEAK
+    # per-device: ref 2.5e11, cur 2.625e11 -> 0.952
+    assert t.columns[1].pop[F.FLOP_SCALING] == pytest.approx(
+        2.5e11 / 2.625e11, rel=1e-6
+    )
+
+
+def test_global_efficiency_composes():
+    t = S.build_table([run(1, 4, 1e12), run(2, 4, 1e12)])
+    for c in t.columns:
+        assert c.pop[F.GLOBAL_EFF] == pytest.approx(
+            c.pop[F.PARALLEL_EFF] * c.pop[F.COMP_SCALABILITY]
+        )
+
+
+def test_missing_region_returns_none():
+    assert S.build_table([run(1, 4, 1e12)], region="nope") is None
+
+
+def test_render_text_contains_rows_and_mode():
+    t = S.build_table([run(1, 4, 1e12), run(2, 4, 1e12)])
+    txt = S.render_text(t)
+    assert "Global efficiency" in txt
+    assert "1x4" in txt and "2x4" in txt
+    assert "strong" in txt
+
+
+def test_table_is_order_invariant():
+    runs = [run(2, 4, 1e12), run(1, 4, 1e12), run(4, 4, 1e12)]
+    a = S.build_table(runs)
+    b = S.build_table(list(reversed(runs)))
+    assert [c.label for c in a.columns] == [c.label for c in b.columns]
+    for ca, cb in zip(a.columns, b.columns):
+        assert ca.pop == cb.pop

@@ -1,0 +1,94 @@
+"""Serving correctness: decode path must agree with the full forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.layers.common import init_params
+from repro.models import transformer as T
+from repro.launch.mesh import make_host_mesh
+from repro.serve.serve import BatchScheduler, ServeConfig, make_decode_step, make_prefill_step
+
+
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b", "gemma2-2b", "qwen3-moe-30b-a3b", "zamba2-2.7b",
+    "xlstm-350m",
+])
+def test_decode_matches_forward_logits(arch):
+    """Prefill+decode must reproduce the teacher-forced forward logits —
+    the strongest end-to-end consistency check for every cache type
+    (KV, conv, ssm, mLSTM, sLSTM)."""
+    cfg = smoke_config(arch)
+    if arch in ("zamba2-2.7b", "xlstm-350m"):
+        # chunked-prefill vs stepwise-decode recurrences are mathematically
+        # identical but round differently; the recurrent denominators
+        # (mLSTM max(|q.n|, exp(-m))) amplify reassociation noise roughly
+        # exponentially with depth. Run the cache-logic consistency check
+        # in f32 at one pattern repeat — deeper stacks diverge numerically,
+        # not logically (see DESIGN.md numerics notes).
+        cfg = cfg.replace(compute_dtype_name="float32",
+                          param_dtype_name="float32")
+    if arch == "xlstm-350m":
+        cfg = cfg.replace(repeats=1)
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    Bs, prompt_len, total = 2, 16, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (Bs, total), 4, cfg.vocab)
+
+    # xlstm: jit-vs-eager op fusion perturbs the mLSTM state slightly and
+    # its denominator amplifies that; keep both sides in the same
+    # compilation mode so the check isolates cache logic.
+    jit_ = (lambda f: f) if arch == "xlstm-350m" else jax.jit
+    with mesh:
+        full_logits, _ = jit_(lambda p, b: T.apply_logits(p, b, cfg))(
+            params, {"tokens": toks}
+        )
+        caches = T.init_cache(cfg, Bs, total + 8)
+        _, caches = jit_(make_prefill_step(cfg, mesh))(
+            params, {"tokens": toks[:, :prompt_len]}, caches
+        )
+        decode = jax.jit(make_decode_step(cfg, mesh))
+        errs = []
+        for i in range(prompt_len, total):
+            logits, caches = T.decode_step(
+                params, toks[:, i : i + 1], jnp.asarray(i, jnp.int32), cfg, caches
+            )
+            err = np.max(np.abs(
+                np.asarray(logits, np.float32)
+                - np.asarray(full_logits[:, i], np.float32)
+            ))
+            errs.append(err)
+    assert max(errs) < 0.1, f"{arch}: decode/forward divergence {max(errs)}"
+
+
+def test_prefill_last_logits_match_forward():
+    cfg = smoke_config("tinyllama-1.1b")
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 4, cfg.vocab)
+    with mesh:
+        full_logits, _ = T.apply_logits(params, {"tokens": toks}, cfg)
+        caches = T.init_cache(cfg, 2, 32)
+        next_tok, _ = make_prefill_step(cfg, mesh)(params, {"tokens": toks}, caches)
+    expected = np.argmax(np.asarray(full_logits[:, -1], np.float32), axis=-1)
+    np.testing.assert_array_equal(np.asarray(next_tok), expected)
+
+
+def test_batch_scheduler_completes_requests():
+    cfg = smoke_config("tinyllama-1.1b")
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    with mesh:
+        sched = BatchScheduler(cfg, mesh, ServeConfig(max_len=64, batch=2), params)
+        for rid in range(4):
+            sched.submit([1, 2, 3], request_id=rid, max_new=5)
+        for _ in range(64):
+            sched.step()
+            if len(sched.completed) == 4:
+                break
+    assert len(sched.completed) == 4
+    for req in sched.completed:
+        assert len(req["generated"]) == 5
+        assert all(0 <= t < cfg.vocab_padded for t in req["generated"])

@@ -1,0 +1,195 @@
+"""Tracer baseline vs monitor agreement (paper Tables 6/7 cross-tool check)
+and report generation."""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GLOBAL_REGION,
+    MonitorConfig,
+    ResourceConfig,
+    StepProfile,
+    TalpMonitor,
+    TraceRecorder,
+    generate_report,
+    post_process,
+    scan,
+    trace_storage_bytes,
+)
+from repro.core import factors as F
+
+
+RES = ResourceConfig(num_hosts=2, devices_per_host=4)
+PROFILE = StepProfile(
+    num_devices=8, flops=1e12, hbm_bytes=1e10, collective_bytes_ici=1e8,
+    model_flops=8e11, collective_counts={"all-reduce": 3, "all-gather": 2},
+)
+
+
+def drive(recorder_like, steps=20, clock=None):
+    """Run the same synthetic workload through monitor or tracer."""
+    for s in range(steps):
+        clock[0] += 0.01  # device work
+        if isinstance(recorder_like, TalpMonitor):
+            recorder_like.observe_step(
+                tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0]
+            )
+        else:
+            recorder_like.record_step(
+                tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0]
+            )
+
+
+def test_monitor_and_tracer_agree_on_factors(tmp_path):
+    clock = [0.0]
+    tick = lambda: clock[0]
+
+    mon = TalpMonitor(
+        MonitorConfig(app_name="x", clock=tick, sync_regions=False,
+                      lb_sample_every=1),
+        RES,
+    )
+    mon.attach_static("timestep", PROFILE)
+    mon.start()
+    with mon.region("timestep"):
+        drive(mon, clock=clock)
+    run_mon = mon.finalize()
+
+    clock2 = [0.0]
+    tracer = TraceRecorder(str(tmp_path / "trace"), RES, app_name="x",
+                           clock=lambda: clock2[0])
+    tracer.attach_static("timestep", PROFILE)
+    tracer.region_enter("timestep")
+    drive(tracer, clock=clock2)
+    tracer.region_exit("timestep")
+    tracer.close()
+    run_trace = post_process(str(tmp_path / "trace"))
+
+    a = run_mon.regions["timestep"]
+    b = run_trace.regions["timestep"]
+    assert a.measurements.num_steps == b.measurements.num_steps == 20
+    np.testing.assert_allclose(a.measurements.data_lb, b.measurements.data_lb,
+                               rtol=1e-6)
+    np.testing.assert_allclose(a.measurements.expert_lb,
+                               b.measurements.expert_lb, rtol=1e-6)
+    assert a.counters.useful_flops == b.counters.useful_flops
+    # the factor values the table would show agree
+    for key in (F.DATA_LB, F.EXPERT_LB, F.COMM_EFF, F.ICI_COMM_EFF):
+        np.testing.assert_allclose(a.pop[key], b.pop[key], rtol=1e-5)
+
+
+def test_tracer_storage_scales_with_devices_and_steps(tmp_path):
+    """The paper's Table 2 asymmetry by construction: trace storage grows
+    with devices x steps, monitor JSON stays O(regions)."""
+
+    def trace_size(ndev, steps):
+        clock = [0.0]
+        res = ResourceConfig(num_hosts=1, devices_per_host=ndev)
+        d = str(tmp_path / f"t{ndev}_{steps}")
+        tr = TraceRecorder(d, res, clock=lambda: clock[0])
+        tr.attach_static("s", PROFILE)
+        tr.region_enter("s")
+        for _ in range(steps):
+            clock[0] += 0.01
+            tr.record_step()
+        tr.region_exit("s")
+        tr.close()
+        return trace_storage_bytes(d)
+
+    s1 = trace_size(2, 10)
+    s2 = trace_size(4, 10)
+    s3 = trace_size(2, 40)
+    assert s2 > 1.8 * s1     # scales with devices
+    assert s3 > 3.0 * s1     # scales with steps
+
+    mon = TalpMonitor(MonitorConfig(app_name="m"), RES)
+    mon.start()
+    with mon.region("s"):
+        for _ in range(100):
+            mon.observe_step()
+    run = mon.finalize()
+    run.save(tmp_path / "mon.json")
+    assert os.path.getsize(tmp_path / "mon.json") < 16_000  # O(regions)
+
+
+def _make_history(root, runs=4, slow_at=None):
+    clock = [0.0]
+    for i in range(runs):
+        mon = TalpMonitor(
+            MonitorConfig(app_name="app", clock=lambda: clock[0],
+                          sync_regions=False, lb_sample_every=1),
+            ResourceConfig(num_hosts=1, devices_per_host=8),
+            metadata={
+                "git_commit_short": f"c{i:02d}",
+                "git_commit_timestamp": f"2026-07-{10+i:02d}T00:00:00",
+            },
+        )
+        prof = PROFILE
+        if slow_at is not None and i == slow_at:
+            # remat bug: 2x executed flops
+            prof = StepProfile(**{**PROFILE.to_json(), "flops": 2e12})
+        mon.attach_static("timestep", prof)
+        mon.start()
+        with mon.region("timestep"):
+            for _ in range(10):
+                clock[0] += 0.02 if (slow_at is not None and i == slow_at) else 0.01
+                mon.observe_step()
+        run = mon.finalize()
+        run.timestamp = f"2026-07-{10+i:02d}T01:00:00"
+        run.save(os.path.join(root, "case1", "history", f"run_{i}.json"))
+
+
+def test_report_generation_end_to_end(tmp_path):
+    _make_history(str(tmp_path / "talp"), runs=4, slow_at=2)
+    exps = scan(str(tmp_path / "talp"))
+    assert len(exps) == 1
+    out = str(tmp_path / "site")
+    index = generate_report(exps, out, regions=["timestep"])
+    html = open(index).read()
+    assert "Scaling efficiency" in html
+    assert "timestep" in html
+    assert os.path.exists(os.path.join(out, "findings.json"))
+    findings = json.load(open(os.path.join(out, "findings.json")))
+    # the injected slowdown at commit c02 is detected and explained
+    regressions = [f for f in findings if f["kind"] == "regression"]
+    assert regressions, findings
+    assert any("c02" == f["commit"] for f in regressions)
+    explained = [f for f in regressions if f["commit"] == "c02"][0]
+    assert "flop_scaling" in explained["explanation"] or \
+           "throughput_scaling" in explained["explanation"]
+    badges = [n for n in os.listdir(out) if n.startswith("badge_")]
+    assert badges
+
+
+def test_cli_ci_report_and_badge(tmp_path, capsys):
+    from repro.core.pages import main
+
+    _make_history(str(tmp_path / "talp"), runs=2)
+    rc = main(["ci-report", "-i", str(tmp_path / "talp"), "-o",
+               str(tmp_path / "site"), "--regions", "timestep",
+               "--print-tables"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "Global efficiency" in out
+    rc = main(["badge", "-i", str(tmp_path / "talp"), "-o",
+               str(tmp_path / "b.svg")])
+    assert rc == 0
+    assert "<svg" in open(tmp_path / "b.svg").read()
+    rc = main(["validate", "-i", str(tmp_path / "talp")])
+    assert rc == 0
+
+
+def test_cli_merge_history(tmp_path):
+    from repro.core.pages import main
+
+    _make_history(str(tmp_path / "old"), runs=2)
+    _make_history(str(tmp_path / "new"), runs=1)
+    rc = main(["merge-history", "--history", str(tmp_path / "old"),
+               "--current", str(tmp_path / "new")])
+    assert rc == 0
+    exps = scan(str(tmp_path / "new"))
+    assert len(exps[0].runs) == 2  # one merged + one current
