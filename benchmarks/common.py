@@ -13,6 +13,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
 
 
+def synthetic_call_chain_hlo(n_comps: int = 150) -> str:
+    """A synthetic HLO module text: ENTRY calling a chain of ``n_comps``
+    computations via ``call``/``to_apply``. Large enough that a cold
+    ``analyze_hlo`` parse measurably dominates a cached hit; shared by the
+    CI cache gate (benchmarks/run.py --check) and tests/test_hlo.py so the
+    two cannot drift apart grammatically."""
+    comps, calls = [], []
+    for i in range(n_comps):
+        comps.append(
+            f"%w{i} (p{i}: f32[32,32]) -> f32[32,32] {{\n"
+            f"  %p{i} = f32[32,32]{{1,0}} parameter(0)\n"
+            f"  %m{i} = f32[32,32]{{1,0}} multiply(f32[32,32]{{1,0}} %p{i}, f32[32,32]{{1,0}} %p{i})\n"
+            f"  %d{i} = f32[32,32]{{1,0}} dot(f32[32,32]{{1,0}} %m{i}, f32[32,32]{{1,0}} %p{i}), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n"
+            f"  ROOT %a{i} = f32[32,32]{{1,0}} add(f32[32,32]{{1,0}} %d{i}, f32[32,32]{{1,0}} %p{i})\n"
+            f"}}\n"
+        )
+        prev = "%p" if i == 0 else f"%c{i - 1}"
+        root = "ROOT " if i == n_comps - 1 else ""
+        calls.append(
+            f"  {root}%c{i} = f32[32,32]{{1,0}} call(f32[32,32]{{1,0}} {prev}), to_apply=%w{i}"
+        )
+    return (
+        "HloModule call_chain\n\n" + "\n".join(comps)
+        + "\nENTRY %main (p: f32[32,32]) -> f32[32,32] {\n"
+        + "  %p = f32[32,32]{1,0} parameter(0)\n"
+        + "\n".join(calls) + "\n}\n"
+    )
+
+
 def save_result(name: str, payload: dict) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:

@@ -48,6 +48,7 @@ def main():
 
     from repro.configs import get_config, MoEConfig
     from repro.core.profile import StepProfile
+    from repro import compat
     from repro.core import hlo as H
     from repro.launch.dryrun import lower_cell
     from repro.launch.mesh import devices_per_pod
@@ -69,7 +70,8 @@ def main():
     compiled, model_flops, mesh, meta = lower_cell(
         args.arch, args.shape, args.multi_pod, cfg=cfg, accum=args.accum
     )
-    cost = H.analyze_hlo(compiled.as_text(), devices_per_pod=devices_per_pod(mesh))
+    hlo_text = compat.compiled_text(compiled)
+    cost = H.analyze_hlo(hlo_text, devices_per_pod=devices_per_pod(mesh))
     profile = StepProfile.from_hlo_cost(
         cost, num_devices=mesh.devices.size, model_flops=model_flops,
         xla_cost=H.xla_cost_analysis(compiled), memory=H.memory_stats(compiled),
@@ -82,27 +84,10 @@ def main():
     # carries). A Pallas flash kernel holds all of those in VMEM; its HBM
     # traffic is only q/o once + k/v once per q-block. VMEM footprint:
     # qc*kc*4 + 2*kc*d*2 + qc*d*8 bytes << 128 MB.
-    import re
-    comps = H.parse_computations(compiled.as_text())
-    fusion_bodies = set()
-    for comp in comps.values():
-        for i in comp.instructions.values():
-            if i.op == "fusion":
-                fusion_bodies.update(H._called_comps(i))
-    mult = {next(c.name for c in comps.values() if c.is_entry): 1.0}
-    changed = True
-    while changed:
-        changed = False
-        for cname, comp in comps.items():
-            base = mult.get(cname)
-            if base is None:
-                continue
-            for instr in comp.instructions.values():
-                trips = H._trip_count(instr) if instr.op == "while" else 1.0
-                for callee in H._called_comps(instr):
-                    if callee in comps and mult.get(callee, 0.0) < base * trips:
-                        mult[callee] = base * trips
-                        changed = True
+    mod = H.parse_module(hlo_text)
+    comps = mod.computations
+    fusion_bodies = mod.fusion_bodies
+    mult = mod.multiplicity
 
     layer_mult = 2.0 * max(cfg.repeats * len(cfg.pattern), 1)
     inner_bytes = 0.0

@@ -18,6 +18,7 @@ import time
 import jax
 
 from benchmarks.common import csv_line, save_result
+from repro import compat
 from repro.configs import smoke_config
 from repro.core import MonitorConfig, ResourceConfig, TalpMonitor, TraceRecorder
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -32,7 +33,7 @@ def _setup(steps: int):
     st = init_state(cfg, tcfg, jax.random.PRNGKey(0))
     state = {"params": st.params, "opt_state": st.opt_state, "step": st.step}
     data = SyntheticLM(DataConfig(global_batch=4, seq_len=64, vocab=cfg.vocab))
-    with mesh:
+    with compat.use_mesh(mesh):
         step = jax.jit(make_train_step(cfg, mesh, tcfg))
         state, m = step(state, data.batch_at(0))  # warmup compile
         jax.block_until_ready(m["loss"])
@@ -43,7 +44,7 @@ def _setup(steps: int):
 def run(steps: int = 30, tmpdir: str = "/tmp/repro_overhead") -> dict:
     res = ResourceConfig(num_hosts=1, devices_per_host=1)
     mesh, step, state0, batches = _setup(steps)
-    mesh_ctx = mesh
+    mesh_ctx = compat.use_mesh(mesh)
 
     def run_baseline():
         state = state0

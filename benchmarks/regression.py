@@ -17,6 +17,7 @@ import time
 import jax
 
 from benchmarks.common import csv_line, save_result
+from repro import compat
 from repro.configs import smoke_config
 from repro.core import (
     MonitorConfig, ResourceConfig, StepProfile, TalpMonitor, generate_report,
@@ -42,7 +43,7 @@ def _train_once(commit: str, ts: str, out: str, *, stall_s: float = 0.0,
     )
     # static profile from the compiled step; the flop bug shows up here
     # exactly as it would through the HLO counters of the buggy binary
-    with mesh:
+    with compat.use_mesh(mesh):
         step = jax.jit(make_train_step(cfg, mesh, tcfg))
         example = data.batch_at(0)
         compiled = step.lower(state, example).compile()
@@ -54,11 +55,11 @@ def _train_once(commit: str, ts: str, out: str, *, stall_s: float = 0.0,
     # warm up outside the monitored window: compile time must not pollute
     # the elapsed-time series (it would on real CI too — the paper's runs
     # measure the solver, not the build)
-    with mesh:
+    with compat.use_mesh(mesh):
         _s, _m = step(state, data.batch_at(0))
         jax.block_until_ready(_m["loss"])
 
-    with mesh, mon:
+    with compat.use_mesh(mesh), mon:
         for s in range(steps):
             with mon.region("train_step"):
                 state, metrics = step(state, data.batch_at(s))

@@ -7,15 +7,88 @@ Prints ``name,us_per_call,derived`` CSV lines.
   tables67_*  weak/strong scaling-efficiency tables   (paper Tables 6/7)
   figure7_*   regression detect + explain             (paper Figure 7)
   roofline_*  §Roofline aggregation from the dry-run artifacts
+
+``--check`` is the CI gate: it runs the tier-1 suite
+(``PYTHONPATH=src python -m pytest -x -q``) plus a cold-vs-cached
+``analyze_hlo`` timing assertion, so the HLO parse cache cannot silently
+regress even if the equivalent unit test is edited away.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 
+def _repo_paths() -> tuple[str, str]:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return root, os.path.join(root, "src")
+
+
+def _check_cache_speedup(min_ratio: float = 5.0) -> str:
+    """Assert a cached analyze_hlo call is >= min_ratio faster than the cold
+    parse of the same module text. Returns a CSV summary line."""
+    import time
+
+    from benchmarks.common import synthetic_call_chain_hlo
+    from repro.core import hlo as H
+
+    text = synthetic_call_chain_hlo()
+    H.clear_caches()
+    t0 = time.perf_counter()
+    cold_cost = H.analyze_hlo(text)
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        H.analyze_hlo(text)
+        warm = min(warm, time.perf_counter() - t0)
+    if cold_cost.hbm_bytes <= 0:
+        raise AssertionError("analyze_hlo returned zero hbm_bytes for call-chain module")
+    ratio = cold / max(warm, 1e-12)
+    if ratio < min_ratio:
+        raise AssertionError(
+            f"analyze_hlo cache regressed: cold={cold * 1e3:.2f}ms "
+            f"warm={warm * 1e3:.3f}ms ratio={ratio:.1f}x < {min_ratio}x"
+        )
+    return f"check_hlo_cache,{warm * 1e6:.1f},speedup={ratio:.0f}x"
+
+
+def check() -> int:
+    """CI gate: tier-1 suite green + the analyze_hlo cache guarantee."""
+    import subprocess
+
+    root, src = _repo_paths()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    rc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q"], cwd=root, env=env
+    ).returncode
+    if rc != 0:
+        print(f"[check] tier-1 suite FAILED (rc={rc})", file=sys.stderr)
+        return rc
+    # invoked as `python benchmarks/run.py`: sys.path[0] is benchmarks/, so
+    # both the repo root (for benchmarks.common) and src/ need inserting
+    for p in (src, root):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    try:
+        line = _check_cache_speedup()
+    except AssertionError as e:
+        print(f"[check] {e}", file=sys.stderr)
+        return 1
+    print(line)
+    print("[check] tier-1 suite green, hlo cache OK")
+    return 0
+
+
 def main() -> None:
+    if "--check" in sys.argv[1:]:
+        sys.exit(check())
+
     from benchmarks import overhead, postprocessing, regression, roofline, scaling_tables
 
     lines: list[str] = []

@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs import smoke_config
 from repro.core import MonitorConfig, ResourceConfig, TalpMonitor
 from repro.launch.mesh import make_host_mesh
@@ -32,7 +33,7 @@ def main():
     )
 
     rng = np.random.default_rng(0)
-    with mesh, mon:
+    with compat.use_mesh(mesh), mon:
         sched = BatchScheduler(cfg, mesh, ServeConfig(max_len=128, batch=4), params)
         for rid in range(10):
             prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()

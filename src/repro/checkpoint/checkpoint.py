@@ -30,6 +30,8 @@ import numpy as np
 import jax
 import ml_dtypes
 
+from repro import compat
+
 # numpy cannot natively (de)serialize ml_dtypes types; store them as
 # same-width integer views and restore from the manifest dtype
 _VIEW_AS = {
@@ -139,8 +141,7 @@ def load_checkpoint(
         want_dtype = getattr(tmpl, "dtype", arr.dtype)
         if str(arr.dtype) != str(want_dtype):
             arr = arr.astype(want_dtype)
-        sh = flat_shardings.get(k)
-        out[k] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+        out[k] = compat.device_put(arr, flat_shardings.get(k))
 
     # unflatten back through the template treedef
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)

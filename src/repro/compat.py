@@ -1,0 +1,207 @@
+"""JAX version-portability layer.
+
+Every version-gated JAX attribute access in this repo lives HERE and only
+here. The CI host pins whatever JAX it pins (0.4.x today); the framework
+must run unmodified on old and new releases alike, because a performance
+monitor that crashes on the installed toolchain measures nothing
+(ISSUE 1 / ROADMAP "as fast as the hardware allows").
+
+Shimmed surfaces, each feature-detected at import time (not version-string
+compared — point releases backport features):
+
+* ``make_mesh``        — ``jax.make_mesh`` grew an ``axis_types=`` kwarg and
+                         ``jax.sharding.AxisType`` in 0.5+; 0.4.x has
+                         neither, and very old releases lack ``jax.make_mesh``
+                         entirely (fall back to ``mesh_utils``).
+* ``use_mesh``         — the ambient-mesh context: ``jax.sharding.use_mesh``
+                         (0.5+) or the classic ``with mesh:`` context
+                         manager (0.4.x).
+* ``named_sharding``   — trivial today, but isolates the constructor import.
+* ``device_put``       — placement with an optional sharding.
+* ``cost_analysis`` /
+  ``memory_stats``     — ``compiled.cost_analysis()`` returned a one-element
+                         list in old JAX and a dict in new JAX;
+                         ``memory_analysis()`` raises on some backends.
+* ``compiled_text``    — optimized-HLO text of a compiled executable.
+
+Policy (recorded for future PRs): new code MUST import these helpers
+instead of touching ``jax.sharding.AxisType``-style attributes directly;
+the tier-1 suite greps for violations (tests/test_compat.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+# ---------------------------------------------------------------------------
+# feature detection (once, at import)
+# ---------------------------------------------------------------------------
+
+#: jax.sharding.AxisType.Auto on releases that have it, else None.
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+HAS_AXIS_TYPES = AXIS_TYPE_AUTO is not None
+
+
+def _make_mesh_accepts_axis_types() -> bool:
+    fn = getattr(jax, "make_mesh", None)
+    if fn is None:
+        return False
+    try:
+        return "axis_types" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+MAKE_MESH_HAS_AXIS_TYPES = _make_mesh_accepts_axis_types()
+
+
+def jax_version() -> tuple[int, ...]:
+    """Best-effort numeric version tuple (diagnostics only — never use for
+    feature gating; feature-detect instead)."""
+    out = []
+    for part in jax.__version__.split("."):
+        digits = "".join(ch for ch in part if ch.isdigit())
+        if not digits:
+            break
+        out.append(int(digits))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Sequence[Any] | None = None,
+):
+    """``jax.make_mesh`` portable across the axis_types API change.
+
+    On releases with ``AxisType`` every axis is marked Auto (the classic
+    GSPMD behavior this codebase is written against); on older releases
+    Auto is the only behavior, so the kwarg is simply omitted.
+    """
+    fn = getattr(jax, "make_mesh", None)
+    if fn is not None:
+        if MAKE_MESH_HAS_AXIS_TYPES and HAS_AXIS_TYPES:
+            return fn(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(AXIS_TYPE_AUTO,) * len(tuple(axis_names)),
+                **({"devices": devices} if devices is not None else {}),
+            )
+        return fn(
+            tuple(axis_shapes), tuple(axis_names),
+            **({"devices": devices} if devices is not None else {}),
+        )
+    # ancient JAX: no jax.make_mesh at all
+    from jax.experimental import mesh_utils
+
+    devs = mesh_utils.create_device_mesh(
+        tuple(axis_shapes), devices=list(devices) if devices is not None else None
+    )
+    return jax.sharding.Mesh(devs, tuple(axis_names))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Enter ``mesh`` as the ambient mesh, whatever this JAX calls that.
+
+    ``jax.sharding.use_mesh`` (0.5+) when present, else the classic
+    ``with mesh:`` context (0.4.x). ``jax.set_mesh`` is deliberately NOT
+    probed: on releases where it is a plain global setter rather than a
+    context manager, merely calling it to find out would leak the ambient
+    mesh past this block.
+    """
+    factory = getattr(jax.sharding, "use_mesh", None)
+    if factory is not None:
+        with factory(mesh):
+            yield mesh
+        return
+    with mesh:
+        yield mesh
+
+
+def named_sharding(mesh, spec):
+    """NamedSharding constructor (``spec``: PartitionSpec or axis tuple)."""
+    if not isinstance(spec, jax.sharding.PartitionSpec):
+        spec = jax.sharding.PartitionSpec(*spec) if isinstance(spec, (tuple, list)) \
+            else jax.sharding.PartitionSpec(spec)
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def device_put(x, sharding=None):
+    """``jax.device_put`` with an optional sharding (None = default device)."""
+    if sharding is None:
+        return jax.device_put(x)
+    return jax.device_put(x, sharding)
+
+
+# ---------------------------------------------------------------------------
+# compiled-executable accessors
+# ---------------------------------------------------------------------------
+
+
+def _is_num(v) -> bool:
+    try:
+        float(v)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def cost_analysis(compiled) -> dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Old JAX returns ``[{...}]`` (one dict per partition), new JAX a plain
+    dict; some backends raise. Always returns a (possibly empty) flat
+    str->float dict.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        items = dict(ca).items()
+    except (TypeError, ValueError):
+        return {}
+    return {str(k): float(v) for k, v in items if _is_num(v)}
+
+
+def memory_stats(compiled) -> dict[str, float]:
+    """Normalize ``compiled.memory_analysis()`` (absent/raising on some
+    backends) to a flat str->float dict of the stable field names."""
+    try:
+        ms = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out: dict[str, float] = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ms, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def compiled_text(compiled) -> str:
+    """Optimized HLO text of a compiled executable.
+
+    Deliberately raises when the accessor is missing or failing instead of
+    returning '': an empty string flows into ``analyze_hlo`` as an all-zero
+    HloCost — exactly the silent-zero failure mode the call-graph engine
+    exists to prevent. Callers that can tolerate absence must catch.
+    """
+    return compiled.as_text()

@@ -6,20 +6,30 @@ FLOPs, HBM traffic and collective bytes. XLA's built-in
 ``compiled.cost_analysis()`` visits every instruction **once**, so anything
 inside a ``while`` loop (every ``lax.scan``-over-layers model — i.e. all of
 ours) is undercounted by the trip count. This module re-derives costs from
-``compiled.as_text()`` with correct loop multiplicities:
+``compiled.as_text()`` with a call-graph-correct cost engine:
 
-  * builds the computation graph (ENTRY, while bodies, fusions, calls),
-  * propagates multiplicity through ``while`` ops using the
-    ``known_trip_count`` backend config,
+  * parses the computation graph once per distinct module text (results are
+    cached on a content hash — ``StepProfile``/``monitor.attach_static``
+    re-analyze identical modules for free),
+  * propagates execution multiplicity **topologically** through the call
+    graph: a computation executed from several call sites accumulates the
+    *sum* of its call-site multiplicities, and ``while`` ops multiply their
+    body/condition by the ``known_trip_count`` backend config,
+  * treats ``call``/``while``/``conditional`` bodies as top-level code —
+    their instructions contribute HBM traffic at their propagated
+    multiplicity; only true ``fusion`` bodies are rolled up into the fusion
+    instruction's operand/result traffic (un-fused ``call`` wrappers, which
+    the CPU backend emits for parallel loops, previously zeroed
+    ``hbm_bytes`` entirely),
   * counts dot FLOPs exactly (2 * result_elems * contracted_elems) via a
     per-computation symbol table (operand shapes),
-  * models HBM traffic at fusion granularity (result + operand bytes of
-    top-level instructions),
   * extracts every collective with its replica groups, classifies ICI vs
     DCN by whether the group crosses a pod boundary, and reports both
     operand bytes (the roofline-spec convention) and ring wire bytes,
   * tags rematerialized dot FLOPs (op_name contains ``rematted``) so the
-    FLOP-usefulness factor can attribute waste to remat.
+    FLOP-usefulness factor can attribute waste to remat,
+  * emits a structured per-computation breakdown (``HloCost.per_computation``)
+    consumed by core.profile / core.report.
 
 This is deliberately a *text* analyzer: it needs nothing but what
 ``lowered.compile()`` already produced, works identically on the CPU
@@ -29,13 +39,16 @@ modules plus cross-checked against ``cost_analysis()`` on loop-free graphs.
 
 from __future__ import annotations
 
+import collections
+import copy
 import dataclasses
-import json
-import math
+import hashlib
 import re
-from typing import Any, Iterable
+from typing import Any
 
 import numpy as np
+
+from repro import compat as _compat
 
 DTYPE_BYTES = {
     "pred": 1,
@@ -70,6 +83,9 @@ COLLECTIVE_KINDS = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
     "collective-permute", "ragged-all-to-all", "collective-broadcast",
 )
+# ops whose called computations run once per *caller* execution and whose
+# bodies are therefore top-level code, NOT rolled-up kernels
+_CONTROL_FLOW_OPS = ("while", "conditional", "call")
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _OP_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
@@ -284,6 +300,170 @@ def groups_cross_pod(groups: list[list[int]], devices_per_pod: int | None) -> bo
 
 
 # ---------------------------------------------------------------------------
+# call graph
+# ---------------------------------------------------------------------------
+
+
+def _trip_count(instr: Instruction) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', instr.rest)
+    if m:
+        return float(m.group(1))
+    return 1.0
+
+
+_CALL_KEYS = ("body", "condition", "calls", "branch_computations",
+              "true_computation", "false_computation")
+
+
+def _called_comps(instr: Instruction) -> list[str]:
+    """Computations invoked by this instruction.
+
+    ``to_apply`` is only followed for ``call`` ops: on ``reduce``/
+    ``all-reduce``/``scatter`` it names a per-element combiner (negligible,
+    and counting its instructions at top level would be wrong), but on
+    ``call`` it IS the body — skipping it silently dropped every un-fused
+    call body from the cost model (the hbm_bytes=0.0 bug).
+    """
+    names: list[str] = []
+    keys = _CALL_KEYS + (("to_apply",) if instr.op == "call" else ())
+    for key in keys:
+        m = re.search(rf"{key}=%?([\w\.\-]+)", instr.rest)
+        if m:
+            names.append(m.group(1))
+        else:
+            m = re.search(rf"{key}=\{{([^}}]*)\}}", instr.rest)
+            if m:
+                names += [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+    return names
+
+
+@dataclasses.dataclass
+class ParsedModule:
+    """One parsed + call-graph-analyzed HLO module (cacheable, immutable)."""
+
+    computations: dict[str, Computation]
+    entry: str | None
+    multiplicity: dict[str, float]   # executions per module run, per comp
+    comp_kind: dict[str, str]        # entry|fusion|while_body|while_cond|branch|called|unreachable
+    fusion_bodies: frozenset[str]
+    max_while_trip_count: int
+
+
+def _build_module(hlo_text: str) -> ParsedModule:
+    comps = parse_computations(hlo_text)
+
+    # classify computations by how they are referenced + collect edges
+    kind: dict[str, str] = {}
+    fusion_bodies: set[str] = set()
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    max_trips = 0
+    for cname, comp in comps.items():
+        for instr in comp.instructions.values():
+            callees = [c for c in _called_comps(instr) if c in comps]
+            if not callees:
+                continue
+            trips = _trip_count(instr) if instr.op == "while" else 1.0
+            if instr.op == "while":
+                max_trips = max(max_trips, int(trips))
+            for callee in callees:
+                edges[cname].append((callee, trips))
+                if instr.op == "fusion":
+                    fusion_bodies.add(callee)
+                    kind.setdefault(callee, "fusion")
+                elif instr.op == "while":
+                    body = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                    kind.setdefault(
+                        callee,
+                        "while_body" if body and body.group(1) == callee else "while_cond",
+                    )
+                elif instr.op == "conditional":
+                    kind.setdefault(callee, "branch")
+                else:
+                    kind.setdefault(callee, "called")
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+
+    # multiplicity: topological accumulation over the call DAG. A computation
+    # reached through several call sites executes the SUM of its call-site
+    # multiplicities (cloned computations make this rare, but max — the old
+    # behavior — undercounts when XLA does share one).
+    mult: dict[str, float] = {}
+    if entry is None:
+        mult = {n: 1.0 for n in comps}  # fall back: every comp once
+    else:
+        kind[entry] = "entry"
+        indeg: dict[str, int] = collections.Counter()
+        for cname, out in edges.items():
+            for callee, _ in out:
+                indeg[callee] += 1
+        mult[entry] = 1.0
+        queue = collections.deque(
+            [c for c in comps if indeg[c] == 0]
+        )
+        while queue:
+            cname = queue.popleft()
+            base = mult.get(cname)
+            for callee, trips in edges[cname]:
+                if base is not None:
+                    mult[callee] = mult.get(callee, 0.0) + base * trips
+                indeg[callee] -= 1
+                if indeg[callee] == 0:
+                    queue.append(callee)
+        # comps never reached from ENTRY stay without multiplicity (dead code)
+    for c in comps:
+        kind.setdefault(c, "entry" if c == entry else "unreachable")
+
+    return ParsedModule(
+        computations=comps,
+        entry=entry,
+        multiplicity=mult,
+        comp_kind=kind,
+        fusion_bodies=frozenset(fusion_bodies),
+        max_while_trip_count=max_trips,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parse / cost caches
+# ---------------------------------------------------------------------------
+
+_PARSE_CACHE: "collections.OrderedDict[str, ParsedModule]" = collections.OrderedDict()
+_COST_CACHE: "collections.OrderedDict[tuple[str, int | None], HloCost]" = collections.OrderedDict()
+_PARSE_CACHE_MAX = 64
+_COST_CACHE_MAX = 128
+
+
+def _text_key(hlo_text: str) -> str:
+    return hashlib.blake2b(hlo_text.encode("utf-8", "surrogatepass"),
+                           digest_size=16).hexdigest()
+
+
+def parse_module(hlo_text: str) -> ParsedModule:
+    """Parse + call-graph-analyze ``hlo_text`` (cached on a content hash).
+
+    ``StepProfile.from_compiled`` / ``monitor.attach_static`` routinely see
+    the same module text several times per process; re-parsing a multi-MB
+    dump each time dominated attach time.
+    """
+    key = _text_key(hlo_text)
+    mod = _PARSE_CACHE.get(key)
+    if mod is not None:
+        _PARSE_CACHE.move_to_end(key)
+        return mod
+    mod = _build_module(hlo_text)
+    _PARSE_CACHE[key] = mod
+    while len(_PARSE_CACHE) > _PARSE_CACHE_MAX:
+        _PARSE_CACHE.popitem(last=False)
+    return mod
+
+
+def clear_caches() -> None:
+    """Drop the parse/cost caches (tests, long-lived drivers)."""
+    _PARSE_CACHE.clear()
+    _COST_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
 # cost model
 # ---------------------------------------------------------------------------
 
@@ -310,6 +490,24 @@ class CollectiveCost:
 
 
 @dataclasses.dataclass
+class ComputationCost:
+    """Per-computation slice of the module cost (per device, multiplicity
+    already applied)."""
+
+    name: str
+    kind: str                 # entry|fusion|while_body|while_cond|branch|called|unreachable
+    multiplicity: float
+    num_instructions: int = 0
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class HloCost:
     """Per-device costs of one compiled SPMD program execution."""
 
@@ -323,6 +521,7 @@ class HloCost:
     collective_wire_bytes_dcn: float = 0.0
     collectives: list[CollectiveCost] = dataclasses.field(default_factory=list)
     op_counts: dict[str, float] = dataclasses.field(default_factory=dict)
+    per_computation: dict[str, ComputationCost] = dataclasses.field(default_factory=dict)
     max_while_trip_count: int = 0
 
     @property
@@ -334,6 +533,13 @@ class HloCost:
         for c in self.collectives:
             out[c.kind] = out.get(c.kind, 0) + 1
         return out
+
+    def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[ComputationCost]:
+        """The n most expensive computations by ``by`` (hbm_bytes|flops)."""
+        return sorted(
+            self.per_computation.values(),
+            key=lambda c: getattr(c, by), reverse=True,
+        )[:n]
 
     def to_json(self) -> dict[str, Any]:
         d = {
@@ -355,30 +561,10 @@ class HloCost:
             }
             for c in self.collectives
         ]
+        d["per_computation"] = {
+            name: cc.to_json() for name, cc in self.per_computation.items()
+        }
         return d
-
-
-def _trip_count(instr: Instruction) -> float:
-    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', instr.rest)
-    if m:
-        return float(m.group(1))
-    return 1.0
-
-
-def _called_comps(instr: Instruction) -> list[str]:
-    """Computations invoked by this instruction (excluding reduce combiners,
-    which are per-element and negligible)."""
-    names: list[str] = []
-    for key in ("body", "condition", "calls", "branch_computations",
-                "true_computation", "false_computation"):
-        m = re.search(rf"{key}=%?([\w\.\-]+)", instr.rest)
-        if m:
-            names.append(m.group(1))
-        else:
-            m = re.search(rf"{key}=\{{([^}}]*)\}}", instr.rest)
-            if m:
-                names += [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
-    return names
 
 
 def _dot_flops(instr: Instruction, symtab: dict[str, Instruction]) -> float:
@@ -396,71 +582,37 @@ def _dot_flops(instr: Instruction, symtab: dict[str, Instruction]) -> float:
     return 2.0 * result_elems * k
 
 
-def analyze_hlo(
-    hlo_text: str,
-    devices_per_pod: int | None = None,
-) -> HloCost:
-    """Analyze an optimized (post-SPMD-partitioning) HLO module dump.
+def _compute_cost(mod: ParsedModule, devices_per_pod: int | None) -> HloCost:
+    """Single pass over every live instruction, accumulating module totals
+    and the per-computation breakdown together."""
+    cost = HloCost(max_while_trip_count=mod.max_while_trip_count)
 
-    All numbers are **per device per execution** of the module;
-    multiply by the device count for machine totals.
-    """
-    comps = parse_computations(hlo_text)
-    cost = HloCost()
-
-    # --- multiplicity propagation (BFS from ENTRY through call sites) ---
-    mult: dict[str, float] = {}
-    entry = next((c for c in comps.values() if c.is_entry), None)
-    if entry is None:  # fall back: treat every computation as mult 1
-        entry_names = list(comps)
-        mult = {n: 1.0 for n in entry_names}
-    else:
-        mult[entry.name] = 1.0
-        # process in call order; repeat passes until fixpoint (call graph is a DAG)
-        changed = True
-        guard = 0
-        while changed and guard < 64:
-            changed = False
-            guard += 1
-            for cname, comp in comps.items():
-                base = mult.get(cname)
-                if base is None:
-                    continue
-                for instr in comp.instructions.values():
-                    trips = _trip_count(instr) if instr.op == "while" else 1.0
-                    if instr.op == "while":
-                        cost.max_while_trip_count = max(
-                            cost.max_while_trip_count, int(trips)
-                        )
-                    for callee in _called_comps(instr):
-                        if callee not in comps:
-                            continue
-                        new = base * trips
-                        if mult.get(callee, 0.0) < new:
-                            mult[callee] = new
-                            changed = True
-
-    # --- per-instruction costs ---
-    fusion_bodies = set()
-    for comp in comps.values():
-        for instr in comp.instructions.values():
-            if instr.op == "fusion":
-                fusion_bodies.update(_called_comps(instr))
-
-    for cname, comp in comps.items():
-        m = mult.get(cname)
+    for cname, comp in mod.computations.items():
+        m = mod.multiplicity.get(cname)
         if m is None:
             continue
-        inside_fusion = cname in fusion_bodies
+        inside_fusion = cname in mod.fusion_bodies
+        breakdown = cost.per_computation[cname] = ComputationCost(
+            name=cname, kind=mod.comp_kind.get(cname, "called"),
+            multiplicity=m, num_instructions=len(comp.instructions),
+        )
         symtab = comp.instructions
         for instr in comp.instructions.values():
             op = instr.op
-            base_kind = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-start"):
+                base_kind = op[:-6]
+            elif op.endswith("-done"):
+                # the completion half of an async pair: the -start op carries
+                # all modeled cost, so the -done contributes nothing (counting
+                # it generically would double the pair's HBM traffic)
+                if op[:-5] in COLLECTIVE_KINDS or op[:-5] in ("copy", "send", "recv"):
+                    continue
+                base_kind = op
+            else:
+                base_kind = op
             cost.op_counts[base_kind] = cost.op_counts.get(base_kind, 0.0) + m
 
             if base_kind in COLLECTIVE_KINDS:
-                if op.endswith("-done"):
-                    continue
                 result_bytes = shape_bytes(instr.type_str)
                 groups = parse_replica_groups(instr)
                 if base_kind == "collective-permute":
@@ -497,8 +649,10 @@ def analyze_hlo(
                 else:
                     cost.collective_operand_bytes_ici += operand_bytes * m
                     cost.collective_wire_bytes_ici += wire * m
+                breakdown.collective_operand_bytes += operand_bytes * m
                 # collectives also touch HBM (read + write)
                 cost.hbm_bytes += (operand_bytes + result_bytes) * m
+                breakdown.hbm_bytes += (operand_bytes + result_bytes) * m
                 continue
 
             if op in _FREE_OPS:
@@ -508,22 +662,35 @@ def analyze_hlo(
                 f = _dot_flops(instr, symtab) * m
                 cost.flops += f
                 cost.dot_flops += f
+                breakdown.flops += f
+                breakdown.dot_flops += f
                 if "rematted" in instr.rest or "/checkpoint/" in instr.rest:
                     cost.remat_dot_flops += f
             elif op == "convolution":
                 # rare here; approximate via result elems * window (unknown) -> count result
-                cost.flops += 2.0 * shape_elems(instr.type_str) * m
+                f = 2.0 * shape_elems(instr.type_str) * m
+                cost.flops += f
+                breakdown.flops += f
             elif op in _ELEMENTWISE_FLOP_OPS:
-                cost.flops += shape_elems(instr.type_str) * m
+                f = shape_elems(instr.type_str) * m
+                cost.flops += f
+                breakdown.flops += f
             elif op in ("reduce", "reduce-window"):
                 # ~1 flop per input element
                 for opn in instr.operands[: max(1, len(instr.operands) // 2)]:
                     if opn in symtab:
-                        cost.flops += shape_elems(symtab[opn].type_str) * m
+                        f = shape_elems(symtab[opn].type_str) * m
+                        cost.flops += f
+                        breakdown.flops += f
 
-            # HBM traffic at fusion granularity: only top-level instructions.
+            # HBM traffic at fusion granularity. Fusion bodies are rolled up
+            # into their fusion instruction's operand/result traffic;
+            # call/while/conditional BODIES are top-level code and count in
+            # full, while the call-site instructions themselves are skipped
+            # (their operands/results are the body's parameters/root — the
+            # body already accounts for that traffic).
             # Slicing ops read/write only the slice, not their operands.
-            if not inside_fusion and op not in ("while", "conditional", "call"):
+            if not inside_fusion and op not in _CONTROL_FLOW_OPS:
                 result_bytes = shape_bytes(instr.type_str)
                 if op in ("dynamic-slice", "slice", "gather"):
                     traffic = 2.0 * result_bytes
@@ -547,46 +714,44 @@ def analyze_hlo(
                         if opn in symtab:
                             traffic += shape_bytes(symtab[opn].type_str)
                 cost.hbm_bytes += traffic * m
+                breakdown.hbm_bytes += traffic * m
 
     return cost
 
 
+def analyze_hlo(
+    hlo_text: str,
+    devices_per_pod: int | None = None,
+) -> HloCost:
+    """Analyze an optimized (post-SPMD-partitioning) HLO module dump.
+
+    All numbers are **per device per execution** of the module;
+    multiply by the device count for machine totals.
+
+    Results are cached on (module-text hash, devices_per_pod); repeated
+    analysis of an identical module is a dict hit plus a defensive copy.
+    """
+    key = (_text_key(hlo_text), devices_per_pod)
+    cached = _COST_CACHE.get(key)
+    if cached is not None:
+        _COST_CACHE.move_to_end(key)
+        return copy.deepcopy(cached)
+    cost = _compute_cost(parse_module(hlo_text), devices_per_pod)
+    _COST_CACHE[key] = cost
+    while len(_COST_CACHE) > _COST_CACHE_MAX:
+        _COST_CACHE.popitem(last=False)
+    return copy.deepcopy(cost)
+
+
 # ---------------------------------------------------------------------------
-# integration with jax.stages
+# integration with jax.stages (delegated to the version-compat layer)
 # ---------------------------------------------------------------------------
 
 
 def xla_cost_analysis(compiled) -> dict[str, float]:
     """Normalize compiled.cost_analysis() across jax versions."""
-    try:
-        ca = compiled.cost_analysis()
-    except Exception:
-        return {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    return {str(k): float(v) for k, v in dict(ca).items() if _is_num(v)}
-
-
-def _is_num(v) -> bool:
-    try:
-        float(v)
-        return True
-    except (TypeError, ValueError):
-        return False
+    return _compat.cost_analysis(compiled)
 
 
 def memory_stats(compiled) -> dict[str, float]:
-    try:
-        ms = compiled.memory_analysis()
-    except Exception:
-        return {}
-    out = {}
-    for k in (
-        "argument_size_in_bytes", "output_size_in_bytes",
-        "temp_size_in_bytes", "alias_size_in_bytes",
-        "generated_code_size_in_bytes",
-    ):
-        v = getattr(ms, k, None)
-        if v is not None:
-            out[k] = float(v)
-    return out
+    return _compat.memory_stats(compiled)

@@ -321,12 +321,24 @@ class TalpMonitor:
                 agg.model_flops += r.counters.model_flops
             g.counters = agg
 
+        # per-computation breakdown from attached static profiles, scaled by
+        # the observed step count so it stays consistent with RegionCounters:
+        # lets the report attribute a counter regression to a computation
+        breakdown = {
+            name: st.static.scaled(max(st.steps, st.visits, 1)).top_computations()
+            for name, st in self._regions.items()
+            if st.static is not None and st.static.per_computation
+        }
+        metadata = dict(self.metadata)
+        if breakdown:
+            metadata.setdefault("per_computation", breakdown)
+
         run = RunRecord(
             app_name=self.config.app_name,
             resources=self.resources,
             timestamp=_dt.datetime.now(_dt.timezone.utc).isoformat(),
             regions=regions,
-            metadata=self.metadata,
+            metadata=metadata,
             hardware=self.config.hardware,
         )
         for r in run.regions.values():

@@ -34,6 +34,10 @@ class StepProfile:
     xla_cost: dict[str, float] = dataclasses.field(default_factory=dict)
     memory: dict[str, float] = dataclasses.field(default_factory=dict)
     max_while_trip_count: int = 0
+    # machine-total slice per HLO computation (name -> {kind, multiplicity,
+    # flops, hbm_bytes, collective_operand_bytes}); the report renders the
+    # heaviest entries so a regression can be attributed to a computation
+    per_computation: dict[str, dict[str, Any]] = dataclasses.field(default_factory=dict)
 
     # ---- construction ----
 
@@ -46,7 +50,11 @@ class StepProfile:
         model_flops: float = 0.0,
         model_bytes: float = 0.0,
     ) -> "StepProfile":
-        cost = _hlo.analyze_hlo(compiled.as_text(), devices_per_pod=devices_per_pod)
+        from repro import compat as _compat
+
+        cost = _hlo.analyze_hlo(
+            _compat.compiled_text(compiled), devices_per_pod=devices_per_pod
+        )
         return cls.from_hlo_cost(
             cost,
             num_devices=num_devices,
@@ -67,6 +75,18 @@ class StepProfile:
         memory: dict[str, float] | None = None,
     ) -> "StepProfile":
         n = max(num_devices, 1)
+        per_comp = {
+            name: {
+                "kind": cc.kind,
+                "multiplicity": cc.multiplicity,
+                "num_instructions": cc.num_instructions,
+                "flops": cc.flops * n,
+                "dot_flops": cc.dot_flops * n,
+                "hbm_bytes": cc.hbm_bytes * n,
+                "collective_operand_bytes": cc.collective_operand_bytes * n,
+            }
+            for name, cc in cost.per_computation.items()
+        }
         return cls(
             num_devices=n,
             model_bytes=model_bytes,
@@ -83,6 +103,7 @@ class StepProfile:
             xla_cost=dict(xla_cost or {}),
             memory=dict(memory or {}),
             max_while_trip_count=cost.max_while_trip_count,
+            per_computation=per_comp,
         )
 
     # ---- transforms ----
@@ -96,7 +117,22 @@ class StepProfile:
             "model_flops", "model_bytes",
         ):
             d[k] = d[k] * steps
+        d["per_computation"] = {
+            name: {
+                k: (v * steps if k in ("flops", "dot_flops", "hbm_bytes",
+                                       "collective_operand_bytes") else v)
+                for k, v in cc.items()
+            }
+            for name, cc in d["per_computation"].items()
+        }
         return StepProfile(**d)
+
+    def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[dict[str, Any]]:
+        """The n most expensive computations by ``by`` (name folded in)."""
+        items = [
+            {"name": name, **cc} for name, cc in self.per_computation.items()
+        ]
+        return sorted(items, key=lambda c: c.get(by, 0.0), reverse=True)[:n]
 
     def to_counters(self) -> RegionCounters:
         return RegionCounters(

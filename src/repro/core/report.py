@@ -202,6 +202,35 @@ def table_html(table: _scaling.ScalingTable) -> str:
     return "".join(rows)
 
 
+def computation_breakdown_html(per_computation: dict[str, list[dict]]) -> str:
+    """Collapsible per-region tables of the heaviest HLO computations
+    (``RunRecord.metadata['per_computation']``, written by the monitor from
+    the static StepProfile breakdown)."""
+    parts: list[str] = []
+    for region, comps in per_computation.items():
+        if not comps:
+            continue
+        rows = [
+            "<table class='pop'><tr><th>computation</th><th>kind</th>"
+            "<th>mult</th><th>GFLOP</th><th>HBM GiB</th><th>coll GiB</th></tr>"
+        ]
+        for c in comps:
+            rows.append(
+                f"<tr><td class='name'>{html.escape(str(c.get('name', '?'))[:48])}</td>"
+                f"<td>{html.escape(str(c.get('kind', '')))}</td>"
+                f"<td>{c.get('multiplicity', 1):.0f}</td>"
+                f"<td>{c.get('flops', 0.0) / 1e9:.2f}</td>"
+                f"<td>{c.get('hbm_bytes', 0.0) / 2**30:.3f}</td>"
+                f"<td>{c.get('collective_operand_bytes', 0.0) / 2**30:.3f}</td></tr>"
+            )
+        rows.append("</table>")
+        parts.append(
+            f"<details><summary>HLO computation breakdown — region "
+            f"<code>{html.escape(region)}</code></summary>{''.join(rows)}</details>"
+        )
+    return "".join(parts)
+
+
 # ---------------------------------------------------------------------------
 # full report
 # ---------------------------------------------------------------------------
@@ -250,6 +279,13 @@ def generate_report(
                 continue
             body.append(f"<h3>Scaling efficiency — region <code>{html.escape(region)}</code></h3>")
             body.append(table_html(table))
+
+        # --- per-computation breakdown (latest run that recorded one) ---
+        for run in reversed(latest):
+            pc = run.metadata.get("per_computation")
+            if isinstance(pc, dict) and pc:
+                body.append(computation_breakdown_html(pc))
+                break
 
         # --- time-evolution plots ---
         cfg_series = _timeseries.build_series(exp.runs)

@@ -9,7 +9,8 @@ tested across 8->4 and 4->8 device CPU meshes.
 from __future__ import annotations
 
 import jax
-from jax.sharding import NamedSharding
+
+from repro import compat
 
 
 def reshard_state(state_tree, target_mesh, target_pspecs):
@@ -19,6 +20,6 @@ def reshard_state(state_tree, target_mesh, target_pspecs):
 
     def f(leaf, pspec):
         host = jax.device_get(leaf)
-        return jax.device_put(host, NamedSharding(target_mesh, pspec))
+        return compat.device_put(host, compat.named_sharding(target_mesh, pspec))
 
     return jax.tree_util.tree_map(f, state_tree, target_pspecs)

@@ -22,7 +22,9 @@ from __future__ import annotations
 
 from typing import Any
 
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
 
 BATCH_AXES = ("pod", "data")
 
@@ -166,7 +168,7 @@ def input_shardings(cfg, mesh: Mesh, batch_spec_tree):
 
     def f(x):
         ndim = len(x.shape)
-        return NamedSharding(mesh, P(bp[0], *([None] * (ndim - 1))))
+        return compat.named_sharding(mesh, P(bp[0], *([None] * (ndim - 1))))
 
     import jax
 

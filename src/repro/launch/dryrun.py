@@ -24,8 +24,9 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import (
     SHAPES, SHAPE_BY_NAME, effective_mode, get_config, list_archs, skip_reason,
 )
@@ -62,7 +63,7 @@ def abstract_state(cfg, tcfg: TrainConfig):
 
 def _sharding(mesh, pspec_tree):
     return jax.tree_util.tree_map(
-        lambda p: NamedSharding(mesh, p), pspec_tree,
+        lambda p: compat.named_sharding(mesh, p), pspec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
 
@@ -76,7 +77,7 @@ def _batch_shardings(mesh, batch_tree, lead_dims: int = 1):
         axes = SH.divisible_batch_axes(mesh, x.shape[b_index])
         spec = [None] * len(x.shape)
         spec[b_index] = axes
-        return NamedSharding(mesh, P(*spec))
+        return compat.named_sharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map(f, batch_tree)
 
@@ -96,7 +97,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, tcfg=None, cfg=None,
             "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
             "strategy": SH.effective_strategy(cfg, mesh)}
 
-    with mesh:
+    with compat.use_mesh(mesh):
         if mode == "train":
             state = abstract_state(cfg, tcfg)
             from repro.train.train import train_state_pspecs

@@ -3,11 +3,16 @@
 ``make_production_mesh`` is a FUNCTION (never module-level state) so that
 importing this module does not touch jax device initialization — the
 dry-run must set XLA_FLAGS before any device query.
+
+All mesh construction goes through :mod:`repro.compat` so the same code
+runs on JAX releases with and without the ``axis_types``/``AxisType`` API.
 """
 
 from __future__ import annotations
 
 import jax
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,9 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None):
@@ -28,10 +31,7 @@ def make_host_mesh(model: int | None = None):
     n = len(jax.devices())
     model = model or 1
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def devices_per_pod(mesh) -> int | None:

@@ -24,6 +24,7 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
+    from repro import compat
     from repro.configs import get_config, smoke_config
     from repro.core import MonitorConfig, ResourceConfig, TalpMonitor
     from repro.launch.mesh import make_host_mesh
@@ -42,7 +43,7 @@ def main(argv=None) -> int:
         ResourceConfig(num_hosts=1, devices_per_host=len(jax.devices())),
     )
     rng = np.random.default_rng(0)
-    with mesh, mon:
+    with compat.use_mesh(mesh), mon:
         sched = BatchScheduler(
             cfg, mesh, ServeConfig(max_len=args.max_len, batch=args.batch), params
         )

@@ -14,8 +14,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.distributed import sharding as SH
 from repro.layers.common import LogicalConstraints
 from repro.models import transformer as T
@@ -152,9 +153,10 @@ class BatchScheduler:
         self._attach()
         if all(a is None for a in self.active):
             return 0
-        self.tokens, self.caches = self.decode(
-            self.params, self.tokens, jnp.asarray(self.pos, jnp.int32), self.caches
-        )
+        with compat.use_mesh(self.mesh):
+            self.tokens, self.caches = self.decode(
+                self.params, self.tokens, jnp.asarray(self.pos, jnp.int32), self.caches
+            )
         self.pos += 1
         toks = jax.device_get(self.tokens)[:, 0]
         n_active = 0

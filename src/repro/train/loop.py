@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.core import MonitorConfig, ResourceConfig, StepProfile, TalpMonitor
 from repro.data.pipeline import SyntheticLM
@@ -148,7 +149,7 @@ class TrainLoop:
         if self.ckpt and self.ckpt.latest() is not None:
             state_tree, start = self.ckpt.restore(state_tree)
         example = self.data.batch_at(0)
-        with self.mesh:
+        with compat.use_mesh(self.mesh):
             jitted = jit_train_step(self.cfg, self.mesh, self.tcfg)(example)
             lowered = jitted.lower(state_tree, example)
             compiled = lowered.compile()
@@ -162,7 +163,7 @@ class TrainLoop:
         )
 
         def step_fn(s, b):
-            with self.mesh:
+            with compat.use_mesh(self.mesh):
                 return compiled(s, b)
 
         return state_tree, start, step_fn, profile

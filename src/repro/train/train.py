@@ -166,12 +166,12 @@ def make_train_step(cfg, mesh, tcfg: TrainConfig):
 
 def jit_train_step(cfg, mesh, tcfg: TrainConfig, donate: bool = True):
     """pjit-wrapped step with explicit in/out shardings."""
-    from jax.sharding import NamedSharding
+    from repro import compat
 
     step_fn = make_train_step(cfg, mesh, tcfg)
     sp = train_state_pspecs(cfg, mesh, tcfg)
     to_sharding = lambda tree: jax.tree_util.tree_map(
-        lambda p: NamedSharding(mesh, p), tree
+        lambda p: compat.named_sharding(mesh, p), tree
     )
     state_sh = to_sharding(sp)
     bp = SH.batch_pspec(cfg, mesh)
@@ -180,7 +180,7 @@ def jit_train_step(cfg, mesh, tcfg: TrainConfig, donate: bool = True):
         def f(x):
             # (A, B, ...): microbatch dim replicated, batch dim sharded
             spec = [None, bp[0]] + [None] * (len(x.shape) - 2)
-            return NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+            return compat.named_sharding(mesh, jax.sharding.PartitionSpec(*spec))
 
         return jax.tree_util.tree_map(f, batch_tree)
 

@@ -6,3 +6,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import shared fixtures from benchmarks/
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

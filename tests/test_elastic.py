@@ -26,6 +26,7 @@ def _run(ndev: int, code: str) -> str:
 
 COMMON = """
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import smoke_config
 from repro.layers.common import init_params, param_pspecs
 from repro.models import transformer as T
@@ -33,8 +34,7 @@ from repro.distributed import sharding as SH
 from repro.checkpoint import save_checkpoint, load_checkpoint
 from jax.sharding import NamedSharding
 cfg = smoke_config("tinyllama-1.1b")
-mesh = jax.make_mesh(MESH_SHAPE, ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh(MESH_SHAPE, ("data", "model"))
 pspecs = param_pspecs(T.model_params(cfg), SH.param_rules(cfg, mesh), mesh)
 shardings = jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), pspecs,
     is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
@@ -75,7 +75,7 @@ tcfg = TrainConfig()
 st = init_state(cfg, tcfg, jax.random.PRNGKey(0))
 state = {"params": st.params, "opt_state": st.opt_state, "step": st.step}
 data = SyntheticLM(DataConfig(global_batch=4, seq_len=32, vocab=cfg.vocab))
-with mesh:
+with compat.use_mesh(mesh):
     step = jax.jit(make_train_step(cfg, mesh, tcfg))
     state, _ = step(state, data.batch_at(0))
 save_checkpoint(state, CKPT, 1)
@@ -94,7 +94,7 @@ sh = jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p), sp,
     is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 state, step_no = load_checkpoint(template, CKPT, shardings=sh)
 data = SyntheticLM(DataConfig(global_batch=4, seq_len=32, vocab=cfg.vocab))
-with mesh:
+with compat.use_mesh(mesh):
     stepf = jax.jit(make_train_step(cfg, mesh, tcfg))
     state, metrics = stepf(state, data.batch_at(1))
 import numpy as np

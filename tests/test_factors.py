@@ -3,6 +3,11 @@
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (requirements-dev.txt); property tests skipped",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import factors as F

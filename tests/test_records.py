@@ -4,6 +4,11 @@ import json
 import os
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency (requirements-dev.txt); property tests skipped",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import folder as FD

@@ -193,3 +193,34 @@ def test_cli_merge_history(tmp_path):
     assert rc == 0
     exps = scan(str(tmp_path / "new"))
     assert len(exps[0].runs) == 2  # one merged + one current
+
+
+def test_per_computation_breakdown_flows_to_report(tmp_path):
+    """StepProfile.per_computation -> monitor metadata -> rendered report."""
+    import jax
+    import jax.numpy as jnp
+
+    compiled = jax.jit(lambda a, b: jnp.tanh(a @ b).sum()).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+    ).compile()
+    prof = StepProfile.from_compiled(compiled, num_devices=1)
+    assert prof.per_computation  # the engine emitted a breakdown
+    assert prof.top_computations(1)[0]["hbm_bytes"] > 0
+
+    mon = TalpMonitor(
+        MonitorConfig(app_name="bd", sync_regions=False),
+        ResourceConfig(num_hosts=1, devices_per_host=1),
+    )
+    with mon:
+        with mon.region("train_step"):
+            mon.observe_step()
+        mon.attach_static("train_step", prof)
+    run = mon.finalize()
+    assert "per_computation" in run.metadata
+    run.save(os.path.join(tmp_path, "exp", "run_0.json"))
+
+    exps = scan(str(tmp_path))
+    index = generate_report(exps, str(tmp_path / "site"))
+    html = open(index).read()
+    assert "HLO computation breakdown" in html
