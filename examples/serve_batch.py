@@ -44,6 +44,7 @@ def main():
                 sched.step()
                 mon.observe_step(sched.tokens)
                 steps += 1
+            sched.drain()  # flush any deferred token readbacks
 
     run = mon.finalize()
     out = "results/serve_batch/talp_serve.json"

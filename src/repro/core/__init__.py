@@ -17,12 +17,15 @@ from repro.core.monitor import MonitorConfig, TalpMonitor
 from repro.core.profile import StepProfile
 from repro.core.records import (
     GLOBAL_REGION,
+    SCHEMA_VERSION,
+    ComputationCounters,
     RegionCounters,
     RegionMeasurements,
     RegionRecord,
     ResourceConfig,
     RunRecord,
 )
+from repro.core.regression import ComputationShift, Finding, detect, explain_computations
 from repro.core.report import badge_svg, generate_report
 from repro.core.scaling import ScalingTable, build_table, latest_per_config, render_text
 from repro.core.timeseries import build_series
@@ -30,7 +33,9 @@ from repro.core.tracer import TraceRecorder, post_process, trace_storage_bytes
 
 __all__ = [
     "TalpMonitor", "MonitorConfig", "StepProfile", "RunRecord", "RegionRecord",
-    "RegionCounters", "RegionMeasurements", "ResourceConfig", "GLOBAL_REGION",
+    "RegionCounters", "RegionMeasurements", "ComputationCounters",
+    "ResourceConfig", "GLOBAL_REGION", "SCHEMA_VERSION",
+    "ComputationShift", "Finding", "detect", "explain_computations",
     "ChipSpec", "TPU_V5E", "TPU_V5P", "DEFAULT_TARGET", "get_target",
     "compute_pop", "validate_pop", "build_table", "render_text", "ScalingTable",
     "latest_per_config", "build_series", "generate_report", "badge_svg",

@@ -536,10 +536,9 @@ class HloCost:
 
     def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[ComputationCost]:
         """The n most expensive computations by ``by`` (hbm_bytes|flops)."""
-        return sorted(
-            self.per_computation.values(),
-            key=lambda c: getattr(c, by), reverse=True,
-        )[:n]
+        from repro.core.records import top_computations
+
+        return top_computations(self.per_computation.values(), n, by)
 
     def to_json(self) -> dict[str, Any]:
         d = {

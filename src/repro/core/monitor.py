@@ -37,12 +37,14 @@ import numpy as np
 from repro.core import factors as _factors
 from repro.core.profile import StepProfile
 from repro.core.records import (
+    DEFAULT_TOP_COMPUTATIONS,
     GLOBAL_REGION,
     RegionCounters,
     RegionMeasurements,
     RegionRecord,
     ResourceConfig,
     RunRecord,
+    merge_computations,
 )
 
 
@@ -59,6 +61,9 @@ class MonitorConfig:
     sync_regions: bool = True
     lb_sample_every: int = 10
     overlap_fraction: float = 0.0  # modeled compute/comm overlap for comm-eff
+    # how many of the heaviest HLO computations to persist per region
+    # (bounds the run-record size; 0 disables the breakdown entirely)
+    top_computations: int = DEFAULT_TOP_COMPUTATIONS
     clock: Callable[[], float] = time.perf_counter
 
 
@@ -301,10 +306,21 @@ class TalpMonitor:
                 inter_pod_lb=st.inter_pod_lb.value(),
             )
             counters = RegionCounters()
+            computations = {}
             if st.static is not None:
                 n = max(st.steps, st.visits, 1)
-                counters = st.static.scaled(n).to_counters()
-            regions[name] = RegionRecord(name=name, measurements=meas, counters=counters)
+                scaled = st.static.scaled(n)
+                counters = scaled.to_counters()
+                # typed per-computation slice (schema v3), truncated to the
+                # heaviest entries so the artifact stays O(regions)-small
+                computations = {
+                    cc.name: cc
+                    for cc in scaled.top_computations(self.config.top_computations)
+                }
+            regions[name] = RegionRecord(
+                name=name, measurements=meas, counters=counters,
+                computations=computations,
+            )
 
         # Global region inherits summed counters from annotated children if
         # it has none itself (TALP's implicit-global semantics).
@@ -320,25 +336,18 @@ class TalpMonitor:
                 agg.collective_bytes_dcn += r.counters.collective_bytes_dcn
                 agg.model_flops += r.counters.model_flops
             g.counters = agg
-
-        # per-computation breakdown from attached static profiles, scaled by
-        # the observed step count so it stays consistent with RegionCounters:
-        # lets the report attribute a counter regression to a computation
-        breakdown = {
-            name: st.static.scaled(max(st.steps, st.visits, 1)).top_computations()
-            for name, st in self._regions.items()
-            if st.static is not None and st.static.per_computation
-        }
-        metadata = dict(self.metadata)
-        if breakdown:
-            metadata.setdefault("per_computation", breakdown)
+            if not g.computations:
+                g.computations = merge_computations(
+                    (r.computations for n_, r in regions.items() if n_ != GLOBAL_REGION),
+                    self.config.top_computations,
+                )
 
         run = RunRecord(
             app_name=self.config.app_name,
             resources=self.resources,
             timestamp=_dt.datetime.now(_dt.timezone.utc).isoformat(),
             regions=regions,
-            metadata=metadata,
+            metadata=dict(self.metadata),
             hardware=self.config.hardware,
         )
         for r in run.regions.values():

@@ -38,6 +38,7 @@ def _cmd_ci_report(args: argparse.Namespace) -> int:
         region_for_badge=args.region_for_badge,
         overlap_fraction=args.overlap,
         title=args.title,
+        top_computations=args.top_computations,
     )
     n_runs = sum(len(e.runs) for e in experiments)
     print(f"report: {index} ({len(experiments)} experiments, {n_runs} runs)")
@@ -112,6 +113,9 @@ def build_parser() -> argparse.ArgumentParser:
     r.add_argument("--region-for-badge", default=None)
     r.add_argument("--overlap", type=float, default=0.0,
                    help="modeled compute/comm overlap fraction")
+    r.add_argument("--top-computations", type=int, default=8, metavar="N",
+                   help="rows in the per-computation drill-down tables/plots "
+                        "(0 disables the breakdown)")
     r.add_argument("--title", default="TALP-Pages performance report")
     r.add_argument("--print-tables", action="store_true")
     r.set_defaults(fn=_cmd_ci_report)

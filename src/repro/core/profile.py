@@ -12,7 +12,11 @@ from typing import Any
 
 from repro.core import hlo as _hlo
 from repro.core.hardware import ChipSpec, get_target
-from repro.core.records import RegionCounters
+from repro.core.records import (
+    ComputationCounters,
+    RegionCounters,
+    top_computations as _top_computations,
+)
 
 
 @dataclasses.dataclass
@@ -34,10 +38,12 @@ class StepProfile:
     xla_cost: dict[str, float] = dataclasses.field(default_factory=dict)
     memory: dict[str, float] = dataclasses.field(default_factory=dict)
     max_while_trip_count: int = 0
-    # machine-total slice per HLO computation (name -> {kind, multiplicity,
-    # flops, hbm_bytes, collective_operand_bytes}); the report renders the
-    # heaviest entries so a regression can be attributed to a computation
-    per_computation: dict[str, dict[str, Any]] = dataclasses.field(default_factory=dict)
+    # machine-total slice per HLO computation; flows typed into
+    # RegionRecord.computations (schema v3) so a regression can be
+    # attributed to a computation all the way down in the report
+    per_computation: dict[str, ComputationCounters] = dataclasses.field(
+        default_factory=dict
+    )
 
     # ---- construction ----
 
@@ -76,15 +82,16 @@ class StepProfile:
     ) -> "StepProfile":
         n = max(num_devices, 1)
         per_comp = {
-            name: {
-                "kind": cc.kind,
-                "multiplicity": cc.multiplicity,
-                "num_instructions": cc.num_instructions,
-                "flops": cc.flops * n,
-                "dot_flops": cc.dot_flops * n,
-                "hbm_bytes": cc.hbm_bytes * n,
-                "collective_operand_bytes": cc.collective_operand_bytes * n,
-            }
+            name: ComputationCounters(
+                name=name,
+                kind=cc.kind,
+                multiplicity=cc.multiplicity,
+                num_instructions=cc.num_instructions,
+                flops=cc.flops * n,
+                dot_flops=cc.dot_flops * n,
+                hbm_bytes=cc.hbm_bytes * n,
+                collective_operand_bytes=cc.collective_operand_bytes * n,
+            )
             for name, cc in cost.per_computation.items()
         }
         return cls(
@@ -109,30 +116,29 @@ class StepProfile:
     # ---- transforms ----
 
     def scaled(self, steps: float) -> "StepProfile":
-        d = dataclasses.asdict(self)
-        for k in (
-            "flops", "dot_flops", "remat_dot_flops", "hbm_bytes",
-            "collective_bytes_ici", "collective_bytes_dcn",
-            "collective_wire_bytes_ici", "collective_wire_bytes_dcn",
-            "model_flops", "model_bytes",
-        ):
-            d[k] = d[k] * steps
-        d["per_computation"] = {
-            name: {
-                k: (v * steps if k in ("flops", "dot_flops", "hbm_bytes",
-                                       "collective_operand_bytes") else v)
-                for k, v in cc.items()
-            }
-            for name, cc in d["per_computation"].items()
+        kw = {
+            k: getattr(self, k) * steps
+            for k in (
+                "flops", "dot_flops", "remat_dot_flops", "hbm_bytes",
+                "collective_bytes_ici", "collective_bytes_dcn",
+                "collective_wire_bytes_ici", "collective_wire_bytes_dcn",
+                "model_flops", "model_bytes",
+            )
         }
-        return StepProfile(**d)
+        return dataclasses.replace(
+            self,
+            collective_counts=dict(self.collective_counts),
+            xla_cost=dict(self.xla_cost),
+            memory=dict(self.memory),
+            per_computation={
+                name: cc.scaled(steps) for name, cc in self.per_computation.items()
+            },
+            **kw,
+        )
 
-    def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[dict[str, Any]]:
-        """The n most expensive computations by ``by`` (name folded in)."""
-        items = [
-            {"name": name, **cc} for name, cc in self.per_computation.items()
-        ]
-        return sorted(items, key=lambda c: c.get(by, 0.0), reverse=True)[:n]
+    def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[ComputationCounters]:
+        """The n most expensive computations by ``by``."""
+        return _top_computations(self.per_computation.values(), n, by)
 
     def to_counters(self) -> RegionCounters:
         return RegionCounters(
@@ -190,4 +196,9 @@ class StepProfile:
     @classmethod
     def from_json(cls, d: dict[str, Any]) -> "StepProfile":
         known = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["per_computation"] = {
+            name: ComputationCounters.from_json(name, cd)
+            for name, cd in (kw.get("per_computation") or {}).items()
+        }
+        return cls(**kw)

@@ -18,7 +18,7 @@ import json
 import os
 from typing import Any
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 GLOBAL_REGION = "Global"
 
@@ -143,6 +143,93 @@ class RegionMeasurements:
         return cls(**kw)
 
 
+# truncation knob shared by the collectors (MonitorConfig default, tracer):
+# how many of the heaviest computations a region persists, ranked by
+# RANK_METRIC. The regression side uses RANK_METRIC to decide whether a
+# computation absent from one run's breakdown could merely sit below the cut.
+DEFAULT_TOP_COMPUTATIONS = 16
+RANK_METRIC = "hbm_bytes"
+
+
+def top_computations(items, n: int = 8, by: str = RANK_METRIC) -> list:
+    """The n heaviest per-computation cost entries by attribute ``by`` —
+    the one ranking shared by HloCost, StepProfile and RegionRecord."""
+    return sorted(items, key=lambda c: getattr(c, by), reverse=True)[: max(n, 0)]
+
+
+def merge_computations(
+    per_region, n: int = DEFAULT_TOP_COMPUTATIONS
+) -> dict[str, "ComputationCounters"]:
+    """Sum per-computation counters across regions and keep the heaviest n —
+    the Global region's breakdown inheritance (monitor and tracer)."""
+    agg: dict[str, ComputationCounters] = {}
+    for comps in per_region:
+        for cn, cc in comps.items():
+            prev = agg.get(cn)
+            if prev is None:
+                agg[cn] = dataclasses.replace(cc)
+            else:
+                prev.flops += cc.flops
+                prev.dot_flops += cc.dot_flops
+                prev.hbm_bytes += cc.hbm_bytes
+                prev.collective_operand_bytes += cc.collective_operand_bytes
+    return {cc.name: cc for cc in top_computations(agg.values(), n)}
+
+
+@dataclasses.dataclass
+class ComputationCounters:
+    """Counters for one HLO computation inside a region (schema v3).
+
+    The per-computation slice of ``RegionCounters``: machine totals over the
+    whole region lifetime, derived from the static ``StepProfile`` breakdown
+    scaled by the observed step count. This is what lets a regression finding
+    name the computation whose counters moved instead of stopping at the
+    factor leaf (e.g. "communication efficiency -> while_body.all_gather.3").
+
+    ``kind`` is the call-graph role from core.hlo (entry|fusion|while_body|
+    while_cond|branch|called); ``multiplicity`` is executions per step.
+    """
+
+    name: str = ""
+    kind: str = "called"
+    multiplicity: float = 1.0
+    num_instructions: int = 0
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+
+    # metrics a regression can be attributed to (share-shift ranking)
+    METRICS = ("flops", "hbm_bytes", "collective_operand_bytes")
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("name")  # dict key carries the name
+        return d
+
+    @classmethod
+    def from_json(cls, name: str, d: dict[str, Any]) -> "ComputationCounters":
+        return cls(
+            name=name or str(d.get("name", "")),
+            kind=str(d.get("kind", "called")),
+            multiplicity=float(d.get("multiplicity", 1.0)),
+            num_instructions=int(d.get("num_instructions", 0)),
+            flops=float(d.get("flops", 0.0)),
+            dot_flops=float(d.get("dot_flops", 0.0)),
+            hbm_bytes=float(d.get("hbm_bytes", 0.0)),
+            collective_operand_bytes=float(d.get("collective_operand_bytes", 0.0)),
+        )
+
+    def scaled(self, steps: float) -> "ComputationCounters":
+        return dataclasses.replace(
+            self,
+            flops=self.flops * steps,
+            dot_flops=self.dot_flops * steps,
+            hbm_bytes=self.hbm_bytes * steps,
+            collective_operand_bytes=self.collective_operand_bytes * steps,
+        )
+
+
 @dataclasses.dataclass
 class RegionRecord:
     name: str
@@ -154,13 +241,26 @@ class RegionRecord:
     # factor name -> value). Persisted so the report side never recomputes
     # from raw data of old schema versions.
     pop: dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-HLO-computation slice of ``counters`` (schema v3; the heaviest
+    # computations only — the monitor truncates to its top_computations knob)
+    computations: dict[str, ComputationCounters] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def top_computations(self, n: int = 8, by: str = "hbm_bytes") -> list[ComputationCounters]:
+        return top_computations(self.computations.values(), n, by)
 
     def to_json(self) -> dict[str, Any]:
-        return {
+        d = {
             "measurements": self.measurements.to_json(),
             "counters": self.counters.to_json(),
             "pop": dict(self.pop),
         }
+        if self.computations:
+            d["computations"] = {
+                cn: cc.to_json() for cn, cc in self.computations.items()
+            }
+        return d
 
     @classmethod
     def from_json(cls, name: str, d: dict[str, Any]) -> "RegionRecord":
@@ -169,6 +269,10 @@ class RegionRecord:
             measurements=RegionMeasurements.from_json(d.get("measurements", {})),
             counters=RegionCounters.from_json(d.get("counters", {})),
             pop={k: float(v) for k, v in d.get("pop", {}).items()},
+            computations={
+                cn: ComputationCounters.from_json(cn, cd)
+                for cn, cd in d.get("computations", {}).items()
+            },
         )
 
 
@@ -235,20 +339,50 @@ class RunRecord:
             name: RegionRecord.from_json(name, rd)
             for name, rd in d.get("regions", {}).items()
         }
+        metadata = dict(d.get("metadata", {}))
+        if ver < 3:
+            _migrate_v2_computations(regions, metadata)
         return cls(
             app_name=str(d.get("app_name", "unknown")),
             resources=ResourceConfig.from_json(d.get("resources", {})),
             timestamp=str(d.get("timestamp", "")),
             regions=regions,
-            metadata=dict(d.get("metadata", {})),
+            metadata=metadata,
             hardware=str(d.get("hardware", "tpu_v5e")),
-            schema_version=ver,
+            # migrated records are v3-shaped in memory; a re-save writes v3
+            schema_version=SCHEMA_VERSION,
         )
 
     @classmethod
     def load(cls, path: str | os.PathLike) -> "RunRecord":
         with open(os.fspath(path)) as f:
             return cls.from_json(json.load(f))
+
+
+def _migrate_v2_computations(
+    regions: dict[str, RegionRecord], metadata: dict[str, Any]
+) -> None:
+    """v2 -> v3: lift the untyped ``metadata["per_computation"]`` blob
+    (region -> list of {name, kind, ...} dicts, written by the old monitor)
+    into the typed ``RegionRecord.computations`` field, in place.
+
+    Keeps the paper's merge-history loop intact: old CI artifacts keep
+    loading and render through the same per-computation drill-down as fresh
+    v3 records.
+    """
+    blob = metadata.pop("per_computation", None)
+    if not isinstance(blob, dict):
+        return
+    for region_name, comps in blob.items():
+        reg = regions.get(region_name)
+        if reg is None or not isinstance(comps, list):
+            continue
+        for cd in comps:
+            if not isinstance(cd, dict):
+                continue
+            cname = str(cd.get("name", ""))
+            if cname and cname not in reg.computations:
+                reg.computations[cname] = ComputationCounters.from_json(cname, cd)
 
 
 def load_folder(folder: str | os.PathLike) -> list[RunRecord]:

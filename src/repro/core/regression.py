@@ -8,14 +8,79 @@ the factor tree to the deepest factor whose change is sufficient to explain
 the move ("OpenMP serialization efficiency is responsible for the parallel
 efficiency increase" in the paper's GENE-X study becomes e.g. "dispatch
 efficiency is responsible for the parallel-efficiency drop" here).
+
+Schema v3 records carry a typed per-computation counter breakdown
+(``RegionRecord.computations``), so the walk no longer stops at the factor
+leaf: ``detect``/``explain_computations`` descend one more level and the
+``Finding`` names the HLO computation(s) whose counter share shifted most —
+e.g. "explained by Communication efficiency -> `while_body.all_gather.3`
+(+41% collective bytes)".
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core import factors as F
+from repro.core.records import RANK_METRIC
 from repro.core.timeseries import RegionSeries
+
+# Which counter metric a leaf factor implicates. Communication factors move
+# with collective traffic; FLOP scaling with executed FLOPs; throughput /
+# dispatch with kernel cost (HBM traffic is the usual driver on TPUs).
+# Factors without an entry (load balances) are measured, not counter-derived,
+# so attribution falls back to the largest shift across all metrics.
+_LEAF_METRIC: dict[str, str] = {
+    F.COMM_EFF: "collective_operand_bytes",
+    F.ICI_COMM_EFF: "collective_operand_bytes",
+    F.DCN_COMM_EFF: "collective_operand_bytes",
+    F.COMP_SCALABILITY: "flops",
+    F.FLOP_SCALING: "flops",
+    F.THROUGHPUT_SCALING: "hbm_bytes",
+    F.DISPATCH_EFF: "hbm_bytes",
+}
+
+_METRIC_LABELS = {
+    "flops": "flops",
+    "hbm_bytes": "hbm bytes",
+    "collective_operand_bytes": "collective bytes",
+}
+
+
+@dataclasses.dataclass
+class ComputationShift:
+    """One HLO computation whose counter moved between two runs."""
+
+    name: str
+    metric: str          # which ComputationCounters metric shifted
+    before: float
+    after: float
+    share_shift: float   # |after-before| / max(metric totals of both runs)
+
+    @property
+    def rel_change(self) -> float:
+        if self.before > 0:
+            return (self.after - self.before) / self.before
+        return float("inf") if self.after > 0 else 0.0
+
+    def describe(self) -> str:
+        label = _METRIC_LABELS.get(self.metric, self.metric)
+        if self.before > 0 and self.after > 0:
+            return f"`{self.name}` ({self.rel_change * 100.0:+.0f}% {label})"
+        if self.before == 0:
+            return f"`{self.name}` (new, {label})"
+        return f"`{self.name}` (gone, {label})"
+
+    def to_json(self) -> dict:
+        rel = self.rel_change
+        return {
+            "name": self.name, "metric": self.metric,
+            "before": self.before, "after": self.after,
+            # inf (computation appeared) is not valid JSON; null means "new"
+            "rel_change": rel if math.isfinite(rel) else None,
+            "share_shift": self.share_shift,
+        }
 
 
 @dataclasses.dataclass
@@ -30,6 +95,9 @@ class Finding:
     rel_change: float    # (after-before)/before; negative = faster
     explanation: list[str]   # factor path, outermost -> deepest
     factor_changes: dict[str, tuple[float, float]]
+    # one level deeper than the factor leaf: the computations whose counter
+    # share shifted most (empty when the records carry no breakdown)
+    computations: list[ComputationShift] = dataclasses.field(default_factory=list)
 
     def describe(self) -> str:
         direction = "improvement" if self.rel_change < 0 else "regression"
@@ -39,11 +107,19 @@ class Finding:
         if self.commit:
             head += f" at commit {self.commit}"
         if not self.explanation:
-            return head + " — no factor change explains it (likely machine noise or external change)"
+            tail = " — no factor change explains it (likely machine noise or external change)"
+            if self.computations:
+                tail = " — no factor change explains it; counter shift in " + ", ".join(
+                    c.describe() for c in self.computations
+                )
+            return head + tail
         path = " -> ".join(F.DISPLAY_NAMES.get(k, k) for k in self.explanation)
         leaf = self.explanation[-1]
         b, a = self.factor_changes[leaf]
-        return f"{head} — explained by {path} ({b:.3f} -> {a:.3f})"
+        out = f"{head} — explained by {path} ({b:.3f} -> {a:.3f})"
+        if self.computations:
+            out += " -> " + ", ".join(c.describe() for c in self.computations)
+        return out
 
 
 def _tree_children(key: str, node=F.FACTOR_TREE):
@@ -93,6 +169,68 @@ def explain(
     return path, changes
 
 
+def explain_computations(
+    before: dict[str, dict[str, float]],
+    after: dict[str, dict[str, float]],
+    metric: str | None = None,
+    top_n: int = 3,
+    min_share_shift: float = 0.02,
+) -> list[ComputationShift]:
+    """Descend below the factor leaf: rank HLO computations by how much of
+    the region's counter total their change accounts for.
+
+    ``before``/``after`` map computation name -> {metric -> value} (the
+    ``SeriesPoint.computations`` shape). With ``metric`` given (from the
+    factor leaf via ``_LEAF_METRIC``) only that counter is ranked; otherwise
+    each computation is scored on its most-shifted metric. Share-of-total
+    ranking (|delta| / max(total_before, total_after)) keeps tiny-but-noisy
+    computations out even when their relative change is huge.
+
+    The persisted breakdowns are top-N truncated (MonitorConfig
+    .top_computations, ranked by ``records.RANK_METRIC``), so a computation
+    missing from one side may merely have fallen below that side's cut, not
+    appeared/vanished. A one-sided computation is attributed only when its
+    RANK_METRIC value exceeds the absent side's cut (the smallest retained
+    value) — it could not have been truncated away — and is then genuinely
+    "new"/"gone" (missing values are 0).
+    """
+    if not before or not after:
+        # one side carries no breakdown at all (pre-v3 record): any
+        # attribution would mark every computation new/gone — say nothing
+        return []
+    metrics = [metric] if metric else list(_METRIC_LABELS)
+    totals = {
+        m: max(
+            sum(c.get(m, 0.0) for c in before.values()),
+            sum(c.get(m, 0.0) for c in after.values()),
+            1e-30,
+        )
+        for m in metrics
+    }
+    cut_b = min((c.get(RANK_METRIC, 0.0) for c in before.values()), default=0.0)
+    cut_a = min((c.get(RANK_METRIC, 0.0) for c in after.values()), default=0.0)
+    shifts: list[ComputationShift] = []
+    for name in {*before, *after}:
+        b_c, a_c = before.get(name), after.get(name)
+        if b_c is None and a_c.get(RANK_METRIC, 0.0) <= cut_b:
+            continue  # may just sit below before's truncation cut
+        if a_c is None and b_c.get(RANK_METRIC, 0.0) <= cut_a:
+            continue  # may just sit below after's truncation cut
+        best: ComputationShift | None = None
+        for m in metrics:
+            b = b_c.get(m, 0.0) if b_c is not None else 0.0
+            a = a_c.get(m, 0.0) if a_c is not None else 0.0
+            share = abs(a - b) / totals[m]
+            if best is None or share > best.share_shift:
+                best = ComputationShift(
+                    name=name, metric=m, before=b, after=a, share_shift=share
+                )
+        if best is not None and best.share_shift >= min_share_shift:
+            shifts.append(best)
+    shifts.sort(key=lambda s: s.share_shift, reverse=True)
+    return shifts[:top_n]
+
+
 def _with_cross_run_scalability(
     before: dict[str, float], after: dict[str, float]
 ) -> dict[str, float]:
@@ -137,6 +275,10 @@ def detect(
             continue
         after = _with_cross_run_scalability(prev.values, cur.values)
         path, changes = explain(prev.values, after, factor_threshold)
+        leaf_metric = _LEAF_METRIC.get(path[-1]) if path else None
+        comps = explain_computations(
+            prev.computations, cur.computations, metric=leaf_metric
+        )
         findings.append(
             Finding(
                 kind="improvement" if rel < 0 else "regression",
@@ -149,6 +291,7 @@ def detect(
                 rel_change=rel,
                 explanation=path,
                 factor_changes=changes,
+                computations=comps,
             )
         )
     return findings

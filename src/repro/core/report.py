@@ -12,6 +12,7 @@ from __future__ import annotations
 import html
 import json
 import os
+import re
 from typing import Sequence
 
 from repro.core import factors as F
@@ -202,12 +203,16 @@ def table_html(table: _scaling.ScalingTable) -> str:
     return "".join(rows)
 
 
-def computation_breakdown_html(per_computation: dict[str, list[dict]]) -> str:
-    """Collapsible per-region tables of the heaviest HLO computations
-    (``RunRecord.metadata['per_computation']``, written by the monitor from
-    the static StepProfile breakdown)."""
+def computation_breakdown_html(
+    run, eid: str, top_n: int = 8, open_details: bool = False
+) -> str:
+    """Per-experiment drill-down: collapsible per-region tables of the
+    heaviest HLO computations (typed ``RegionRecord.computations``, schema
+    v3). Anchored at ``comps_{eid}`` so regression findings and the
+    time-evolution plots can deep-link into it."""
     parts: list[str] = []
-    for region, comps in per_computation.items():
+    for region, reg in run.regions.items():
+        comps = reg.top_computations(top_n)
         if not comps:
             continue
         rows = [
@@ -216,19 +221,24 @@ def computation_breakdown_html(per_computation: dict[str, list[dict]]) -> str:
         ]
         for c in comps:
             rows.append(
-                f"<tr><td class='name'>{html.escape(str(c.get('name', '?'))[:48])}</td>"
-                f"<td>{html.escape(str(c.get('kind', '')))}</td>"
-                f"<td>{c.get('multiplicity', 1):.0f}</td>"
-                f"<td>{c.get('flops', 0.0) / 1e9:.2f}</td>"
-                f"<td>{c.get('hbm_bytes', 0.0) / 2**30:.3f}</td>"
-                f"<td>{c.get('collective_operand_bytes', 0.0) / 2**30:.3f}</td></tr>"
+                f"<tr><td class='name'>{html.escape(c.name[:48])}</td>"
+                f"<td>{html.escape(c.kind)}</td>"
+                f"<td>{c.multiplicity:.0f}</td>"
+                f"<td>{c.flops / 1e9:.2f}</td>"
+                f"<td>{c.hbm_bytes / 2**30:.3f}</td>"
+                f"<td>{c.collective_operand_bytes / 2**30:.3f}</td></tr>"
             )
         rows.append("</table>")
         parts.append(
-            f"<details><summary>HLO computation breakdown — region "
-            f"<code>{html.escape(region)}</code></summary>{''.join(rows)}</details>"
+            f"<details{' open' if open_details else ''}>"
+            f"<summary>HLO computation breakdown — region "
+            f"<code>{html.escape(region)}</code> (top {len(comps)}, latest run)"
+            f"</summary>{''.join(rows)}</details>"
         )
-    return "".join(parts)
+    if not parts:
+        return ""
+    # eid is sanitized to [A-Za-z0-9_-] by the caller, so id == href target
+    return f"<div id='comps_{eid}'>{''.join(parts)}</div>"
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +253,7 @@ def generate_report(
     region_for_badge: str | None = None,
     overlap_fraction: float = 0.0,
     title: str = "TALP-Pages performance report",
+    top_computations: int = 8,
 ) -> str:
     """Write the report site under ``out_dir``; returns index.html path."""
     os.makedirs(out_dir, exist_ok=True)
@@ -253,7 +264,8 @@ def generate_report(
     summary_findings: list[_regression.Finding] = []
 
     for exp in experiments:
-        eid = exp.rel_path.replace(os.sep, "__").replace(" ", "_")
+        # id-safe: eid feeds element ids, #fragment hrefs and JS strings
+        eid = re.sub(r"[^A-Za-z0-9_-]", "_", exp.rel_path.replace(os.sep, "__"))
         body.append(f"<h2>Experiment: {html.escape(exp.name)}</h2>")
         body.append(
             f"<p class='meta'>{len(exp.runs)} runs, "
@@ -280,12 +292,15 @@ def generate_report(
             body.append(f"<h3>Scaling efficiency — region <code>{html.escape(region)}</code></h3>")
             body.append(table_html(table))
 
-        # --- per-computation breakdown (latest run that recorded one) ---
-        for run in reversed(latest):
-            pc = run.metadata.get("per_computation")
-            if isinstance(pc, dict) and pc:
-                body.append(computation_breakdown_html(pc))
-                break
+        # --- per-computation drill-down (latest run that recorded one) ---
+        has_breakdown = False
+        if top_computations > 0:
+            for run in reversed(latest):
+                bd = computation_breakdown_html(run, eid, top_computations)
+                if bd:
+                    body.append(bd)
+                    has_breakdown = True
+                    break
 
         # --- time-evolution plots ---
         cfg_series = _timeseries.build_series(exp.runs)
@@ -323,6 +338,23 @@ def generate_report(
                     svg = _svg_plot(f"{gtitle} ({cs.label})", series, xlabels, y01=y01)
                     if svg:
                         body.append(f"<span class='plot'>{svg}</span>")
+                # per-computation time evolution (heaviest HLO computations)
+                if top_computations > 0:
+                    comp_names = rs.top_computation_names(min(5, top_computations))
+                    if comp_names:
+                        cseries = rs.computation_series("hbm_bytes")
+                        svg = _svg_plot(
+                            f"Top computations, HBM bytes ({cs.label})",
+                            [(name[-28:], cseries[name]) for name in comp_names],
+                            xlabels,
+                        )
+                        if svg:
+                            body.append(f"<span class='plot'>{svg}</span>")
+                        if has_breakdown:
+                            body.append(
+                                f"<p class='meta'><a href='#comps_{eid}'>"
+                                "per-computation drill-down</a></p>"
+                            )
                 body.append("</div>")
 
             # --- findings (regressions / improvements) ---
@@ -330,8 +362,14 @@ def generate_report(
                 findings = _regression.detect(cs.regions[rn], cs.label)
                 summary_findings.extend(findings)
                 for fd in findings:
+                    link = (
+                        f" <a href='#comps_{eid}'>[computation breakdown]</a>"
+                        if has_breakdown and fd.computations
+                        else ""
+                    )
                     body.append(
-                        f"<p class='finding-{fd.kind}'>&#9888; {html.escape(fd.describe())}</p>"
+                        f"<p class='finding-{fd.kind}'>&#9888; "
+                        f"{html.escape(fd.describe())}{link}</p>"
                     )
 
     page = (
@@ -352,6 +390,7 @@ def generate_report(
                     "timestamp": fd.timestamp, "commit": fd.commit,
                     "rel_change": fd.rel_change,
                     "explanation": fd.explanation,
+                    "computations": [c.to_json() for c in fd.computations],
                     "description": fd.describe(),
                 }
                 for fd in summary_findings

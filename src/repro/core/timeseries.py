@@ -38,6 +38,12 @@ class SeriesPoint:
     timestamp: str
     commit: str | None
     values: dict[str, float]  # factor key -> value (one region)
+    # per-HLO-computation counters at this point (schema v3):
+    # computation name -> {metric -> value}, metrics per
+    # records.ComputationCounters.METRICS
+    computations: dict[str, dict[str, float]] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 @dataclasses.dataclass
@@ -49,6 +55,29 @@ class RegionSeries:
         return [
             (p.timestamp, p.values[key]) for p in self.points if key in p.values
         ]
+
+    def computation_series(self, metric: str = "hbm_bytes") -> dict[str, list[float]]:
+        """Per-computation time series of one counter metric, aligned to
+        ``points`` (NaN where a point lacks the computation — e.g. runs
+        recorded before the computation existed or below the top-N cut)."""
+        names: list[str] = []
+        for p in self.points:
+            for n in p.computations:
+                if n not in names:
+                    names.append(n)
+        return {
+            n: [p.computations.get(n, {}).get(metric, float("nan")) for p in self.points]
+            for n in names
+        }
+
+    def top_computation_names(self, n: int = 5, metric: str = "hbm_bytes") -> list[str]:
+        """Names of the n heaviest computations by peak ``metric`` over the
+        series (the ones worth plotting)."""
+        peak: dict[str, float] = {}
+        for p in self.points:
+            for cn, cv in p.computations.items():
+                peak[cn] = max(peak.get(cn, 0.0), cv.get(metric, 0.0))
+        return sorted(peak, key=lambda cn: peak[cn], reverse=True)[:n]
 
 
 @dataclasses.dataclass
@@ -63,7 +92,12 @@ class ConfigSeries:
             "label": self.label,
             "regions": {
                 name: [
-                    {"timestamp": p.timestamp, "commit": p.commit, "values": p.values}
+                    {
+                        "timestamp": p.timestamp,
+                        "commit": p.commit,
+                        "values": p.values,
+                        "computations": p.computations,
+                    }
                     for p in rs.points
                 ]
                 for name, rs in self.regions.items()
@@ -101,6 +135,10 @@ def build_series(runs: list[RunRecord]) -> list[ConfigSeries]:
                         commit=run.metadata.get("git_commit_short")
                         or run.metadata.get("git_commit"),
                         values=values,
+                        computations={
+                            cn: {m: getattr(cc, m) for m in cc.METRICS}
+                            for cn, cc in reg.computations.items()
+                        },
                     )
                 )
         out.append(ConfigSeries(label=label, regions=regions))

@@ -31,12 +31,14 @@ import numpy as np
 from repro.core import factors as _factors
 from repro.core.profile import StepProfile
 from repro.core.records import (
+    DEFAULT_TOP_COMPUTATIONS,
     GLOBAL_REGION,
     RegionCounters,
     RegionMeasurements,
     RegionRecord,
     ResourceConfig,
     RunRecord,
+    merge_computations,
 )
 
 
@@ -226,9 +228,19 @@ def post_process(trace_dir: str) -> RunRecord:
             host_lb=float(np.mean(reg.host_lb_samples)) if reg.host_lb_samples else None,
         )
         counters = RegionCounters()
+        computations = {}
         if name in profiles:
-            counters = profiles[name].scaled(max(reg.steps, 1)).to_counters()
-        regions[name] = RegionRecord(name=name, measurements=meas, counters=counters)
+            scaled = profiles[name].scaled(max(reg.steps, 1))
+            counters = scaled.to_counters()
+            # same typed breakdown as the monitor (cross-tool agreement)
+            computations = {
+                cc.name: cc
+                for cc in scaled.top_computations(DEFAULT_TOP_COMPUTATIONS)
+            }
+        regions[name] = RegionRecord(
+            name=name, measurements=meas, counters=counters,
+            computations=computations,
+        )
 
     g = regions.setdefault(GLOBAL_REGION, RegionRecord(name=GLOBAL_REGION))
     if g.counters.useful_flops == 0.0:
@@ -240,6 +252,11 @@ def post_process(trace_dir: str) -> RunRecord:
             g.counters.collective_bytes_ici += r.counters.collective_bytes_ici
             g.counters.collective_bytes_dcn += r.counters.collective_bytes_dcn
             g.counters.model_flops += r.counters.model_flops
+        if not g.computations:
+            # Global inherits the child breakdown, exactly like the monitor
+            g.computations = merge_computations(
+                r.computations for n_, r in regions.items() if n_ != GLOBAL_REGION
+            )
 
     import datetime as _dt
 

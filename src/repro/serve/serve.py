@@ -121,7 +121,16 @@ def make_encoder_step(cfg, mesh):
 
 class BatchScheduler:
     """Greedy slot-based continuous batching: fixed B decode slots; finished
-    sequences are replaced by queued requests (prefill on attach)."""
+    sequences are replaced by queued requests (prefill on attach).
+
+    Token readback is **deferred and batched**: a decode step only appends
+    the on-device token array to a pending list (keeping the dispatch
+    pipeline free of host round-trips), and one ``jax.device_get`` of the
+    whole pending batch runs when a request is about to complete (or on
+    ``drain()``). Completion is count-based (``max_new``), so the host never
+    needs token *values* mid-flight — N decode steps cost one transfer
+    instead of N.
+    """
 
     def __init__(self, cfg, mesh, scfg: ServeConfig, params):
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
@@ -133,11 +142,14 @@ class BatchScheduler:
         self.active: list[dict | None] = [None] * scfg.batch
         self.pos = 0
         self.completed: list[dict] = []
+        # pending readbacks: (device tokens of one step, slot->request map
+        # at that step); flushed in a single device_get
+        self._pending: list[tuple[Any, list[dict | None]]] = []
 
     def submit(self, prompt_tokens, request_id, max_new: int = 32) -> None:
         self.queue.append(
             {"id": request_id, "prompt": prompt_tokens, "max_new": max_new,
-             "generated": []}
+             "generated": [], "_pending": 0}
         )
 
     def _attach(self) -> None:
@@ -147,6 +159,28 @@ class BatchScheduler:
                 self.active[slot] = req
                 tok = req["prompt"][-1] if len(req["prompt"]) else 0
                 self.tokens = self.tokens.at[slot, 0].set(int(tok))
+
+    def _flush(self) -> None:
+        """Materialize all pending tokens in ONE host transfer and retire
+        any requests that reached their budget."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        host = jax.device_get([toks for toks, _ in pending])  # single transfer
+        for toks, (_, slots) in zip(host, pending):
+            for slot, req in enumerate(slots):
+                if req is None:
+                    continue
+                req["generated"].append(int(toks[slot, 0]))
+                req["_pending"] -= 1
+        for slot, req in enumerate(self.active):
+            if req is not None and len(req["generated"]) >= req["max_new"]:
+                self.completed.append(req)
+                self.active[slot] = None
+
+    def drain(self) -> None:
+        """Flush outstanding readbacks (end of serving loop / inspection)."""
+        self._flush()
 
     def step(self) -> int:
         """One decode step for the whole batch; returns #active."""
@@ -158,15 +192,14 @@ class BatchScheduler:
                 self.params, self.tokens, jnp.asarray(self.pos, jnp.int32), self.caches
             )
         self.pos += 1
-        toks = jax.device_get(self.tokens)[:, 0]
-        n_active = 0
-        for slot, req in enumerate(self.active):
+        self._pending.append((self.tokens, list(self.active)))
+        flush_due = False
+        for req in self.active:
             if req is None:
                 continue
-            req["generated"].append(int(toks[slot]))
-            if len(req["generated"]) >= req["max_new"]:
-                self.completed.append(req)
-                self.active[slot] = None
-            else:
-                n_active += 1
-        return n_active
+            req["_pending"] += 1
+            if len(req["generated"]) + req["_pending"] >= req["max_new"]:
+                flush_due = True
+        if flush_due:
+            self._flush()
+        return sum(1 for req in self.active if req is not None)

@@ -1,0 +1,117 @@
+"""``talp ci-report`` CLI round-trip smoke test (run in CI next to
+``benchmarks/run.py --check``): a tmp folder mixing v2 and v3 records must
+produce an HTML index, rendered badges, and the per-computation drill-down.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.pages import main
+from repro.core.records import (
+    GLOBAL_REGION,
+    ComputationCounters,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+
+
+def _base_run(ts, commit, elapsed):
+    run = RunRecord(
+        app_name="smoke",
+        resources=ResourceConfig(num_hosts=1, devices_per_host=8),
+        timestamp=ts,
+        metadata={"git_commit_short": commit, "git_commit_timestamp": ts},
+    )
+    reg = RegionRecord(
+        name=GLOBAL_REGION,
+        measurements=RegionMeasurements(
+            elapsed_s=elapsed, num_steps=10, device_time_s=elapsed * 0.9
+        ),
+        counters=RegionCounters(useful_flops=1e12, hlo_bytes=1e10,
+                                collective_bytes_ici=1e8, model_flops=8e11),
+    )
+    from repro.core import factors as F
+
+    reg.pop = F.compute_pop(reg, run.resources, run.hardware)
+    run.regions[GLOBAL_REGION] = reg
+    return run
+
+
+def _write_v2(path, ts, commit, elapsed):
+    """A record as the v2 monitor wrote it (breakdown in metadata blob)."""
+    d = _base_run(ts, commit, elapsed).to_json()
+    d["schema_version"] = 2
+    for rd in d["regions"].values():
+        rd.pop("computations", None)
+    d["metadata"]["per_computation"] = {
+        GLOBAL_REGION: [
+            {"name": "while_body.fusion.1", "kind": "while_body",
+             "multiplicity": 24, "num_instructions": 30, "flops": 8e11,
+             "dot_flops": 6e11, "hbm_bytes": 9e9,
+             "collective_operand_bytes": 1e8},
+        ]
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(d, f)
+
+
+def _write_v3(path, ts, commit, elapsed):
+    run = _base_run(ts, commit, elapsed)
+    run.global_region.computations = {
+        "while_body.fusion.1": ComputationCounters(
+            name="while_body.fusion.1", kind="while_body", multiplicity=24,
+            num_instructions=30, flops=8e11, dot_flops=6e11, hbm_bytes=9e9,
+            collective_operand_bytes=1e8,
+        ),
+    }
+    run.save(path)
+
+
+@pytest.fixture()
+def mixed_folder(tmp_path):
+    talp = tmp_path / "talp"
+    _write_v2(str(talp / "exp" / "run_0.json"), "2026-07-10T00:00:00", "c00", 1.00)
+    _write_v2(str(talp / "exp" / "run_1.json"), "2026-07-11T00:00:00", "c01", 1.02)
+    _write_v3(str(talp / "exp" / "run_2.json"), "2026-07-12T00:00:00", "c02", 1.01)
+    return talp
+
+
+def test_ci_report_roundtrip_over_v2_and_v3_records(mixed_folder, tmp_path):
+    site = tmp_path / "site"
+    rc = main(["ci-report", "-i", str(mixed_folder), "-o", str(site),
+               "--top-computations", "4"])
+    assert rc == 0
+
+    index = site / "index.html"
+    assert index.exists()
+    html = index.read_text()
+    assert "Scaling efficiency" in html
+    assert "HLO computation breakdown" in html
+    assert "while_body.fusion.1" in html  # v2 blob made it into the drill-down
+    assert os.path.exists(site / "findings.json")
+
+    badges = [n for n in os.listdir(site) if n.startswith("badge_")]
+    assert badges
+    assert "<svg" in (site / badges[0]).read_text()  # badge renders
+
+
+def test_ci_report_top_computations_zero_disables_breakdown(mixed_folder, tmp_path):
+    site = tmp_path / "site0"
+    rc = main(["ci-report", "-i", str(mixed_folder), "-o", str(site),
+               "--top-computations", "0"])
+    assert rc == 0
+    html = (site / "index.html").read_text()
+    assert "HLO computation breakdown" not in html
+
+
+def test_badge_cli_from_mixed_folder(mixed_folder, tmp_path):
+    out = tmp_path / "badge.svg"
+    rc = main(["badge", "-i", str(mixed_folder), "-o", str(out)])
+    assert rc == 0
+    assert "<svg" in out.read_text()

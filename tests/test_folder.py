@@ -1,0 +1,101 @@
+"""core.folder: merge-history semantics, nested experiment dirs, and the
+skip-unreadable-json resilience paths (no optional test deps required)."""
+
+import json
+import os
+
+from repro.core import folder as FD
+from repro.core.records import (
+    GLOBAL_REGION,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+
+
+def make_run(app="app", ts="2026-07-13T10:00:00", elapsed=1.0):
+    r = RunRecord(
+        app_name=app,
+        resources=ResourceConfig(num_hosts=1, devices_per_host=4),
+        timestamp=ts,
+    )
+    r.regions[GLOBAL_REGION] = RegionRecord(
+        name=GLOBAL_REGION,
+        measurements=RegionMeasurements(elapsed_s=elapsed, num_steps=5),
+        counters=RegionCounters(useful_flops=1e9),
+    )
+    return r
+
+
+def test_merge_history_current_pipeline_wins(tmp_path):
+    """Same relative path on both sides: the CURRENT pipeline's file must
+    survive untouched, and only genuinely-new history files are copied."""
+    cur, hist = tmp_path / "cur", tmp_path / "hist"
+    make_run(app="current", elapsed=2.0).save(cur / "exp" / "run.json")
+    make_run(app="historic", elapsed=9.0).save(hist / "exp" / "run.json")
+    make_run(app="historic").save(hist / "exp" / "older.json")
+
+    merged = FD.merge_history(str(hist), str(cur))
+    assert merged == 1  # only older.json; run.json collision keeps current
+    kept = RunRecord.load(cur / "exp" / "run.json")
+    assert kept.app_name == "current"
+    assert kept.global_region.measurements.elapsed_s == 2.0
+    assert RunRecord.load(cur / "exp" / "older.json").app_name == "historic"
+    # idempotent: a second merge copies nothing
+    assert FD.merge_history(str(hist), str(cur)) == 0
+
+
+def test_merge_history_preserves_nested_experiment_dirs(tmp_path):
+    """Nested experiment folders (mesh1/strong, mesh1/weak, root-level) keep
+    their relative layout through a merge, including a record directly in
+    the history root (rel == '.')."""
+    cur, hist = tmp_path / "cur", tmp_path / "hist"
+    os.makedirs(cur, exist_ok=True)
+    make_run().save(hist / "mesh1" / "strong" / "a.json")
+    make_run().save(hist / "mesh1" / "weak" / "b.json")
+    make_run().save(hist / "mesh2" / "c.json")
+    make_run().save(hist / "root.json")
+
+    assert FD.merge_history(str(hist), str(cur)) == 4
+    exps = FD.scan(str(cur))
+    assert sorted(e.rel_path for e in exps) == [
+        ".",
+        os.path.join("mesh1", "strong"),
+        os.path.join("mesh1", "weak"),
+        "mesh2",
+    ]
+    # non-json files are not merged
+    (hist / "mesh2" / "notes.txt").write_text("ignore me")
+    assert FD.merge_history(str(hist), str(cur)) == 0
+
+
+def test_scan_skips_unreadable_json_but_keeps_experiment(tmp_path, capsys):
+    make_run().save(tmp_path / "exp" / "good.json")
+    (tmp_path / "exp" / "broken.json").write_text("{definitely not json")
+    # a too-new schema version is also skipped, not fatal
+    too_new = make_run().to_json()
+    too_new["schema_version"] = 99
+    (tmp_path / "exp" / "future.json").write_text(json.dumps(too_new))
+
+    exps = FD.scan(str(tmp_path))
+    assert len(exps) == 1
+    assert [r.app_name for r in exps[0].runs] == ["app"]
+    out = capsys.readouterr().out
+    assert "skipping unreadable run" in out
+
+
+def test_scan_drops_experiment_with_only_unreadable_json(tmp_path):
+    (tmp_path / "exp").mkdir()
+    (tmp_path / "exp" / "broken.json").write_text("nope")
+    assert FD.scan(str(tmp_path)) == []
+
+
+def test_add_metadata_skips_unreadable_json(tmp_path):
+    make_run().save(tmp_path / "exp" / "good.json")
+    (tmp_path / "exp" / "broken.json").write_text("{]")
+    n = FD.add_metadata(str(tmp_path), {"ci": "yes"})
+    assert n == 1  # only the readable record was updated
+    assert RunRecord.load(tmp_path / "exp" / "good.json").metadata["ci"] == "yes"
+    assert (tmp_path / "exp" / "broken.json").read_text() == "{]"  # untouched

@@ -1,0 +1,177 @@
+"""Regression explanation descends below the factor leaf (schema v3):
+a cost shift localized to one HLO computation is named in the Finding."""
+
+import math
+
+import pytest
+
+from repro.core import factors as F
+from repro.core import regression as R
+from repro.core.records import (
+    ComputationCounters,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+from repro.core.timeseries import build_series
+
+HOT = "while_body.all_gather_fusion.3"
+
+
+def _run(ts, elapsed, device_time, coll_ici, hot_coll, hot_hbm=1e9):
+    """One synthetic run: two computations, all cost movement funnelled into
+    the HOT one via the arguments."""
+    run = RunRecord("app", ResourceConfig(num_hosts=1, devices_per_host=8), ts)
+    reg = RegionRecord(
+        name="timestep",
+        measurements=RegionMeasurements(
+            elapsed_s=elapsed, num_steps=10, device_time_s=device_time
+        ),
+        counters=RegionCounters(
+            useful_flops=1e10, hlo_bytes=1e9 + hot_hbm,
+            collective_bytes_ici=coll_ici,
+        ),
+        computations={
+            HOT: ComputationCounters(
+                name=HOT, kind="while_body", multiplicity=24,
+                flops=1e9, hbm_bytes=hot_hbm, collective_operand_bytes=hot_coll,
+            ),
+            "entry": ComputationCounters(
+                name="entry", kind="entry",
+                flops=9e9, hbm_bytes=1e9, collective_operand_bytes=1e7,
+            ),
+        },
+    )
+    reg.pop = F.compute_pop(reg, run.resources, "tpu_v5e")
+    run.regions["timestep"] = reg
+    return run
+
+
+def detect_single_series(runs):
+    cs = build_series(runs)[0]
+    return R.detect(cs.regions["timestep"], cs.label)
+
+
+def test_localized_collective_regression_names_computation():
+    """Acceptance criterion: a synthetic regression whose cost shift is
+    localized to one HLO computation produces a Finding whose describe()
+    names that computation."""
+    runs = [
+        _run("2026-07-01T00:00:00", 1.0, 0.95, coll_ici=2e8, hot_coll=1.9e8),
+        _run("2026-07-02T00:00:00", 1.4, 1.30, coll_ici=2e9, hot_coll=1.99e9),
+    ]
+    findings = detect_single_series(runs)
+    assert len(findings) == 1
+    fd = findings[0]
+    assert fd.kind == "regression"
+    # factor walk reaches the communication branch...
+    assert F.COMM_EFF in fd.explanation or F.ICI_COMM_EFF in fd.explanation
+    # ...and the computation level pins the shifted computation
+    assert fd.computations and fd.computations[0].name == HOT
+    assert fd.computations[0].metric == "collective_operand_bytes"
+    assert HOT in fd.describe()
+    # serialization carries it (findings.json contract)
+    assert fd.computations[0].to_json()["name"] == HOT
+
+
+def test_attribution_without_factor_path_uses_best_metric():
+    """Elapsed moves but no factor crosses the threshold: attribution still
+    names the computation via the largest cross-metric share shift."""
+    shifts = R.explain_computations(
+        before={HOT: {"flops": 1e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0},
+                "entry": {"flops": 9e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0}},
+        after={HOT: {"flops": 1e9, "hbm_bytes": 4e9, "collective_operand_bytes": 0.0},
+               "entry": {"flops": 9e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0}},
+    )
+    assert shifts and shifts[0].name == HOT and shifts[0].metric == "hbm_bytes"
+    assert shifts[0].rel_change == pytest.approx(3.0)
+
+
+def test_attribution_ranks_by_share_not_relative_change():
+    """A tiny computation with a huge relative jump must not outrank the
+    computation that actually moved the region total."""
+    before = {
+        "big": {"flops": 0.0, "hbm_bytes": 1e10, "collective_operand_bytes": 0.0},
+        "tiny": {"flops": 0.0, "hbm_bytes": 1e3, "collective_operand_bytes": 0.0},
+    }
+    after = {
+        "big": {"flops": 0.0, "hbm_bytes": 2e10, "collective_operand_bytes": 0.0},
+        "tiny": {"flops": 0.0, "hbm_bytes": 1e6, "collective_operand_bytes": 0.0},
+    }
+    shifts = R.explain_computations(before, after, metric="hbm_bytes")
+    assert shifts[0].name == "big"
+    # tiny's share shift (~5e-5) is below the significance floor
+    assert all(s.name != "tiny" for s in shifts)
+
+
+def test_new_computation_reported_as_new():
+    """A computation absent before and too heavy (by the truncation rank
+    metric) to have been below the cut is genuinely new."""
+    shifts = R.explain_computations(
+        before={"entry": {"flops": 1e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0}},
+        after={"entry": {"flops": 1e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0},
+               "all_gather.9": {"flops": 0.0, "hbm_bytes": 2e9,
+                                "collective_operand_bytes": 5e8}},
+        metric="collective_operand_bytes",
+    )
+    assert shifts and shifts[0].name == "all_gather.9"
+    assert math.isinf(shifts[0].rel_change)
+    assert "new" in shifts[0].describe()
+    # inf must not leak into findings.json (invalid JSON token)
+    assert shifts[0].to_json()["rel_change"] is None
+
+
+def test_below_cut_computation_not_reported_as_new():
+    """A computation absent from the (top-N truncated) before breakdown but
+    smaller than before's smallest retained entry may simply have been below
+    the cut — it must not be reported as a huge 'new' shift."""
+    shifts = R.explain_computations(
+        before={"big": {"flops": 0.0, "hbm_bytes": 1e10, "collective_operand_bytes": 0.0},
+                "small": {"flops": 0.0, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0}},
+        after={"big": {"flops": 0.0, "hbm_bytes": 1e10, "collective_operand_bytes": 0.0},
+               "small": {"flops": 0.0, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0},
+               "riser": {"flops": 0.0, "hbm_bytes": 9e8, "collective_operand_bytes": 0.0}},
+        metric="hbm_bytes",
+    )
+    assert all(s.name != "riser" for s in shifts)
+
+
+def test_one_sided_breakdown_yields_no_attribution():
+    """Mixed-era folder: a pre-v3 point (no breakdown) next to a v3 point
+    must not mark every computation 'new'."""
+    comps = {"entry": {"flops": 1e9, "hbm_bytes": 1e9, "collective_operand_bytes": 0.0}}
+    assert R.explain_computations({}, comps) == []
+    assert R.explain_computations(comps, {}) == []
+
+
+def test_timeseries_exposes_computation_series():
+    runs = [
+        _run("2026-07-01T00:00:00", 1.0, 0.95, coll_ici=2e8, hot_coll=1e8, hot_hbm=1e9),
+        _run("2026-07-02T00:00:00", 1.0, 0.95, coll_ici=2e8, hot_coll=1e8, hot_hbm=3e9),
+    ]
+    cs = build_series(runs)[0]
+    rs = cs.regions["timestep"]
+    series = rs.computation_series("hbm_bytes")
+    assert series[HOT] == [1e9, 3e9]
+    assert rs.top_computation_names(1, "hbm_bytes") == [HOT]
+    # a point missing the computation yields NaN (not a crash)
+    rs.points[0].computations.pop(HOT)
+    gaps = rs.computation_series("hbm_bytes")[HOT]
+    assert math.isnan(gaps[0]) and gaps[1] == 3e9
+
+
+def test_records_without_breakdown_yield_plain_findings():
+    """v1/v2-era records (no computations) must keep detecting regressions
+    with the factor-only explanation."""
+    runs = [
+        _run("2026-07-01T00:00:00", 1.0, 0.95, coll_ici=2e8, hot_coll=1.9e8),
+        _run("2026-07-02T00:00:00", 1.4, 1.30, coll_ici=2e9, hot_coll=1.99e9),
+    ]
+    for run in runs:
+        run.regions["timestep"].computations = {}
+    findings = detect_single_series(runs)
+    assert len(findings) == 1
+    assert findings[0].computations == []
+    assert "explained by" in findings[0].describe()

@@ -1,0 +1,121 @@
+"""Record schema v2 -> v3: typed ComputationCounters + loader migration.
+
+Runs without optional deps (unlike test_records.py's hypothesis suite) —
+the migration contract is the merge-history loop's load-bearing wall.
+"""
+
+import json
+
+from repro.core import folder as FD
+from repro.core.records import (
+    GLOBAL_REGION,
+    SCHEMA_VERSION,
+    ComputationCounters,
+    RegionCounters,
+    RegionMeasurements,
+    RegionRecord,
+    ResourceConfig,
+    RunRecord,
+)
+
+
+def make_run(ts="2026-07-13T10:00:00"):
+    r = RunRecord(
+        app_name="app",
+        resources=ResourceConfig(num_hosts=1, devices_per_host=4),
+        timestamp=ts,
+    )
+    r.regions[GLOBAL_REGION] = RegionRecord(
+        name=GLOBAL_REGION,
+        measurements=RegionMeasurements(elapsed_s=1.0, num_steps=5),
+        counters=RegionCounters(useful_flops=1e9),
+        pop={"parallel_efficiency": 0.9},
+    )
+    return r
+
+
+def _v2_payload(comp_name="while_body.fusion.7", hbm=5e9):
+    """A run record JSON exactly as the v2 monitor wrote it: per-computation
+    breakdown only in the untyped metadata blob."""
+    d = make_run().to_json()
+    d["schema_version"] = 2
+    for rd in d["regions"].values():
+        rd.pop("computations", None)
+    d["metadata"]["per_computation"] = {
+        GLOBAL_REGION: [
+            {"name": comp_name, "kind": "while_body", "multiplicity": 12,
+             "num_instructions": 40, "flops": 1e9, "dot_flops": 8e8,
+             "hbm_bytes": hbm, "collective_operand_bytes": 1e8},
+        ]
+    }
+    return d
+
+
+def test_computations_roundtrip_v3():
+    run = make_run()
+    run.global_region.computations["entry"] = ComputationCounters(
+        name="entry", kind="entry", flops=2e9, hbm_bytes=3e9,
+        collective_operand_bytes=1e7, multiplicity=1.0, num_instructions=9,
+    )
+    back = RunRecord.from_json(run.to_json())
+    cc = back.global_region.computations["entry"]
+    assert cc.name == "entry" and cc.kind == "entry"
+    assert cc.flops == 2e9 and cc.hbm_bytes == 3e9
+    assert back.schema_version == SCHEMA_VERSION == 3
+
+
+def test_computation_counters_scaled():
+    cc = ComputationCounters(name="c", flops=2.0, dot_flops=1.0,
+                             hbm_bytes=4.0, collective_operand_bytes=8.0,
+                             multiplicity=3.0, num_instructions=7)
+    s = cc.scaled(10)
+    assert (s.flops, s.dot_flops, s.hbm_bytes, s.collective_operand_bytes) == \
+        (20.0, 10.0, 40.0, 80.0)
+    # structural fields do not scale
+    assert s.multiplicity == 3.0 and s.num_instructions == 7
+
+
+def test_v2_metadata_blob_migrates_to_typed_computations():
+    back = RunRecord.from_json(_v2_payload())
+    assert "per_computation" not in back.metadata  # side-channel lifted
+    cc = back.global_region.computations["while_body.fusion.7"]
+    assert cc.kind == "while_body" and cc.hbm_bytes == 5e9
+    assert cc.multiplicity == 12 and cc.num_instructions == 40
+    # migrated record re-saves as v3
+    assert RunRecord.from_json(back.to_json()).global_region.computations
+
+
+def test_v1_record_without_blob_still_loads():
+    d = make_run().to_json()
+    d["schema_version"] = 1
+    d["metadata"].pop("per_computation", None)
+    back = RunRecord.from_json(d)
+    assert back.global_region.computations == {}
+    assert back.schema_version == SCHEMA_VERSION
+
+
+def test_malformed_v2_blob_is_ignored_not_fatal():
+    d = _v2_payload()
+    d["metadata"]["per_computation"] = {"nonexistent_region": [{"name": "x"}],
+                                        GLOBAL_REGION: "garbage"}
+    back = RunRecord.from_json(d)  # must not raise
+    assert back.global_region.computations == {}
+
+
+def test_v2_and_v3_records_merge_in_one_experiment(tmp_path):
+    """Acceptance criterion: v2 JSON records still load and merge with v3
+    records in one experiment folder (the paper's merge-history loop)."""
+    cur, hist = tmp_path / "cur", tmp_path / "hist"
+    v3 = make_run(ts="2026-07-14T10:00:00")
+    v3.global_region.computations["entry"] = ComputationCounters(
+        name="entry", kind="entry", hbm_bytes=1e9)
+    v3.save(cur / "exp" / "run_new.json")
+    (hist / "exp").mkdir(parents=True)
+    with open(hist / "exp" / "run_old.json", "w") as f:
+        json.dump(_v2_payload(), f)
+    assert FD.merge_history(str(hist), str(cur)) == 1
+    exps = FD.scan(str(cur))
+    assert len(exps) == 1 and len(exps[0].runs) == 2
+    for run in exps[0].runs:
+        assert run.global_region.computations  # both carry a typed breakdown
+        assert run.schema_version == SCHEMA_VERSION

@@ -196,9 +196,12 @@ def test_cli_merge_history(tmp_path):
 
 
 def test_per_computation_breakdown_flows_to_report(tmp_path):
-    """StepProfile.per_computation -> monitor metadata -> rendered report."""
+    """StepProfile.per_computation -> typed RegionRecord.computations ->
+    rendered drill-down (schema v3: no metadata side-channel)."""
     import jax
     import jax.numpy as jnp
+
+    from repro.core import ComputationCounters
 
     compiled = jax.jit(lambda a, b: jnp.tanh(a @ b).sum()).lower(
         jax.ShapeDtypeStruct((32, 32), jnp.float32),
@@ -206,7 +209,8 @@ def test_per_computation_breakdown_flows_to_report(tmp_path):
     ).compile()
     prof = StepProfile.from_compiled(compiled, num_devices=1)
     assert prof.per_computation  # the engine emitted a breakdown
-    assert prof.top_computations(1)[0]["hbm_bytes"] > 0
+    top = prof.top_computations(1)[0]
+    assert isinstance(top, ComputationCounters) and top.hbm_bytes > 0
 
     mon = TalpMonitor(
         MonitorConfig(app_name="bd", sync_regions=False),
@@ -217,10 +221,47 @@ def test_per_computation_breakdown_flows_to_report(tmp_path):
             mon.observe_step()
         mon.attach_static("train_step", prof)
     run = mon.finalize()
-    assert "per_computation" in run.metadata
+    assert "per_computation" not in run.metadata  # side-channel is gone
+    reg = run.regions["train_step"]
+    assert reg.computations and top.name in reg.computations
+    # Global inherits the child breakdown like it inherits counters
+    assert run.global_region.computations
+    # counters and their per-computation slice stay consistent
+    assert reg.computations[top.name].hbm_bytes <= reg.counters.hlo_bytes
     run.save(os.path.join(tmp_path, "exp", "run_0.json"))
 
     exps = scan(str(tmp_path))
+    # reloaded record carries the typed breakdown
+    assert exps[0].runs[0].regions["train_step"].computations
     index = generate_report(exps, str(tmp_path / "site"))
     html = open(index).read()
     assert "HLO computation breakdown" in html
+    assert "comps_exp" in html  # drill-down anchor exists
+
+
+def test_tracer_postprocess_carries_computations(tmp_path):
+    """The tracing baseline recovers the same typed breakdown (cross-tool
+    agreement extends to schema v3)."""
+    from repro.core import ComputationCounters
+
+    prof = StepProfile(
+        num_devices=8, flops=1e12, hbm_bytes=1e10,
+        per_computation={
+            "entry": ComputationCounters(name="entry", kind="entry",
+                                         flops=1e12, hbm_bytes=1e10),
+        },
+    )
+    clock = [0.0]
+    tr = TraceRecorder(str(tmp_path / "tr"), RES, clock=lambda: clock[0])
+    tr.attach_static("s", prof)
+    tr.region_enter("s")
+    for _ in range(3):
+        clock[0] += 0.01
+        tr.record_step()
+    tr.region_exit("s")
+    tr.close()
+    run = post_process(str(tmp_path / "tr"))
+    comps = run.regions["s"].computations
+    assert comps["entry"].flops == pytest.approx(3e12)  # scaled by steps
+    # Global inherits the child breakdown, like the monitor
+    assert run.regions[GLOBAL_REGION].computations["entry"].flops == pytest.approx(3e12)
