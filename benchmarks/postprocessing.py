@@ -16,20 +16,19 @@ import time
 
 from benchmarks.common import csv_line, peak_memory, save_result
 from repro.core import (
-    MonitorConfig,
     ResourceConfig,
     StepProfile,
-    TalpMonitor,
-    TraceRecorder,
     build_table,
     post_process,
     trace_storage_bytes,
 )
+from repro.session import PerfSession, SessionConfig
 
 
 def _generate_runs(root: str, configs=((1, 8), (2, 8), (4, 8)), steps=200,
                    devices_scale_events=True):
-    """Produce both artifacts (JSON + trace) for a synthetic scaling study."""
+    """Produce both artifacts (JSON + trace) for a synthetic scaling study —
+    the same workload driven through both PerfSession backends."""
     os.makedirs(root, exist_ok=True)
     json_dir = os.path.join(root, "talp", "study", "strong")
     runs = []
@@ -44,24 +43,25 @@ def _generate_runs(root: str, configs=((1, 8), (2, 8), (4, 8)), steps=200,
         clock = [0.0]
         tick = lambda: clock[0]
 
-        mon = TalpMonitor(
-            MonitorConfig(app_name="study", clock=tick, sync_regions=False,
-                          lb_sample_every=1), res,
-        )
-        mon.attach_static("timestep", profile)
-        tr = TraceRecorder(os.path.join(root, f"trace_{hosts}x{devs}"), res,
-                           clock=tick)
-        tr.attach_static("timestep", profile)
-        mon.start()
-        tr.region_enter("timestep")
-        with mon.region("timestep"):
+        def _session(backend: str, trace_dir: str = "") -> PerfSession:
+            ses = PerfSession(
+                SessionConfig(app_name="study", backend=backend, clock=tick,
+                              sync_regions=False, lb_sample_every=1,
+                              trace_dir=trace_dir, respect_env=False),
+                res,
+            )
+            ses.attach_static("timestep", profile)
+            return ses.start()
+
+        mon = _session("monitor")
+        tr = _session("tracer", os.path.join(root, f"trace_{hosts}x{devs}"))
+        with mon.region("timestep"), tr.region("timestep"):
             for s in range(steps):
                 clock[0] += 1.0 / n  # perfect strong scaling of step time
                 mon.observe_step(tokens_per_shard=[100] * hosts)
-                tr.record_step(tokens_per_shard=[100] * hosts)
-        tr.region_exit("timestep")
-        tr.close()
-        run = mon.finalize()
+                tr.observe_step(tokens_per_shard=[100] * hosts)
+        tr.stop()  # write the event streams; post-processed separately below
+        run = mon.finalize(git=False)
         run.save(os.path.join(json_dir, f"talp_{hosts}x{devs}.json"))
         runs.append(run)
     return json_dir, [os.path.join(root, f"trace_{h}x{d}") for h, d in configs]

@@ -19,12 +19,10 @@ import jax
 from benchmarks.common import csv_line, save_result
 from repro import compat
 from repro.configs import smoke_config
-from repro.core import (
-    MonitorConfig, ResourceConfig, StepProfile, TalpMonitor, generate_report,
-    scan,
-)
+from repro.core import ResourceConfig, StepProfile, generate_report, scan
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
+from repro.session import PerfSession, SessionConfig
 from repro.train.train import TrainConfig, init_state, make_train_step
 
 
@@ -36,8 +34,9 @@ def _train_once(commit: str, ts: str, out: str, *, stall_s: float = 0.0,
     st = init_state(cfg, tcfg, jax.random.PRNGKey(0))
     state = {"params": st.params, "opt_state": st.opt_state, "step": st.step}
     data = SyntheticLM(DataConfig(global_batch=2, seq_len=32, vocab=cfg.vocab))
-    mon = TalpMonitor(
-        MonitorConfig(app_name="miniapp", lb_sample_every=1),
+    session = PerfSession(
+        SessionConfig(app_name="miniapp", backend="monitor", lb_sample_every=1,
+                      respect_env=False),
         ResourceConfig(num_hosts=1, devices_per_host=1),
         metadata={"git_commit_short": commit, "git_commit_timestamp": ts},
     )
@@ -50,7 +49,7 @@ def _train_once(commit: str, ts: str, out: str, *, stall_s: float = 0.0,
     profile = StepProfile.from_compiled(compiled, num_devices=1)
     profile.flops *= flop_scale
     profile.model_flops = profile.dot_flops
-    mon.attach_static("train_step", profile)
+    session.attach_static("train_step", profile)
 
     # warm up outside the monitored window: compile time must not pollute
     # the elapsed-time series (it would on real CI too — the paper's runs
@@ -59,19 +58,19 @@ def _train_once(commit: str, ts: str, out: str, *, stall_s: float = 0.0,
         _s, _m = step(state, data.batch_at(0))
         jax.block_until_ready(_m["loss"])
 
-    with compat.use_mesh(mesh), mon:
+    with compat.use_mesh(mesh), session:
         for s in range(steps):
-            with mon.region("train_step"):
+            with session.region("train_step"):
                 state, metrics = step(state, data.batch_at(s))
                 if flop_scale > 1.0:
                     # the recompute bug also costs real time
                     t0 = time.perf_counter()
                     while time.perf_counter() - t0 < 0.15:
                         pass
-                mon.observe_step(metrics)
+                session.observe_step(metrics)
                 if stall_s:
                     time.sleep(stall_s)  # host-side stall (input pipeline bug)
-    run = mon.finalize()
+    run = session.finalize(git=False)
     run.save(out)
     return run
 

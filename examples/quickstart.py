@@ -2,6 +2,16 @@
 monitoring, print the POP factors, write a TALP-Pages run record.
 
     PYTHONPATH=src python examples/quickstart.py
+
+All instrumentation flows through the one surface, ``repro.session``: the
+training loop owns a ``PerfSession`` and ``loop.finalize_run(out_dir)``
+writes the schema-v3 run record (git metadata included) into the CI folder
+layout. The environment can re-point or re-plug it with zero code changes:
+
+    TALP_ENABLE=1                     # force collection on
+    TALP_ENABLE=1 TALP_BACKEND=tracer # swap the collector backend
+    TALP_ENABLE=0                     # kill switch: no collection at all
+    TALP_OUT=talp/quickstart/history  # redirect the artifact
 """
 
 import os
@@ -33,10 +43,12 @@ def main():
 
     print("losses:", [round(m["loss"], 3) for m in loop.metrics_history])
 
-    run = loop.finalize_run()
-    out = "results/quickstart/talp_quickstart.json"
-    run.save(out)
-    print(f"\nTALP run record: {out}")
+    # one call: finalize + git metadata + save into the CI folder layout
+    run = loop.finalize_run("results/quickstart")
+    if run is None:  # TALP_ENABLE=0 disabled collection entirely
+        print("monitoring disabled by environment; no run record")
+        return
+    print(f"\nTALP run record: {loop.session.last_record_path}")
 
     reg = run.regions["train_step"]
     print(f"\nPOP factors for region 'train_step' "

@@ -1,8 +1,14 @@
 """Batched serving demo: continuous batching scheduler + TALP monitoring of
-the serving loop (prefill/decode regions), emitting a run record suitable
+the serving loop through ``repro.session``, emitting a run record suitable
 for the same CI report as training runs.
 
     PYTHONPATH=src python examples/serve_batch.py
+
+The scheduler takes the session directly — every decode dispatch is a visit
+of its ``decode`` region, with the static StepProfile derived from the
+compiled decode step by ``session.wrap_step``. No code edits needed to
+re-plug it: ``TALP_ENABLE=1 TALP_BACKEND=tracer`` swaps the collector,
+``TALP_ENABLE=0`` turns the whole thing off.
 """
 
 import os
@@ -13,9 +19,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+import repro
 from repro import compat
 from repro.configs import smoke_config
-from repro.core import MonitorConfig, ResourceConfig, TalpMonitor
+from repro.core import ResourceConfig
 from repro.launch.mesh import make_host_mesh
 from repro.layers.common import init_params
 from repro.models import transformer as T
@@ -27,35 +34,36 @@ def main():
     mesh = make_host_mesh()
     params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
-    mon = TalpMonitor(
-        MonitorConfig(app_name="serve", lb_sample_every=1),
-        ResourceConfig(num_hosts=1, devices_per_host=len(jax.devices())),
+    session = repro.start(
+        "serve", backend="monitor", lb_sample_every=1,
+        resources=ResourceConfig(num_hosts=1,
+                                 devices_per_host=len(jax.devices())),
     )
 
     rng = np.random.default_rng(0)
-    with compat.use_mesh(mesh), mon:
-        sched = BatchScheduler(cfg, mesh, ServeConfig(max_len=128, batch=4), params)
+    with compat.use_mesh(mesh), session:
+        sched = BatchScheduler(cfg, mesh, ServeConfig(max_len=128, batch=4),
+                               params, session=session)
         for rid in range(10):
             prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
             sched.submit(prompt, request_id=rid, max_new=8)
-        with mon.region("decode"):
-            steps = 0
-            while len(sched.completed) < 10 and steps < 200:
-                sched.step()
-                mon.observe_step(sched.tokens)
-                steps += 1
-            sched.drain()  # flush any deferred token readbacks
+        steps = 0
+        while len(sched.completed) < 10 and steps < 200:
+            sched.step()
+            steps += 1
+        sched.drain()  # flush any deferred token readbacks
 
-    run = mon.finalize()
-    out = "results/serve_batch/talp_serve.json"
-    run.save(out)
+    run = session.finalize("results/serve_batch")
     print(f"completed {len(sched.completed)} requests in {steps} decode steps")
     for req in sched.completed[:3]:
         print(f"  request {req['id']}: generated {req['generated']}")
+    if run is None:
+        print("monitoring disabled by environment; no run record")
+        return
     reg = run.regions["decode"]
     print(f"decode region: {reg.measurements.num_steps} steps, "
           f"dispatch efficiency {reg.pop.get('dispatch_efficiency', 0):.3f}")
-    print(f"run record: {out}")
+    print(f"run record: {session.last_record_path}")
 
 
 if __name__ == "__main__":

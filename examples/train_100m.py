@@ -73,12 +73,13 @@ def main():
     hist = loop.metrics_history
     print(f"steps {hist[0]['step']}..{hist[-1]['step']}  "
           f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
-    run = loop.finalize_run()
-    os.makedirs(args.out, exist_ok=True)
-    out = os.path.join(args.out, f"talp_{run.timestamp.replace(':', '')[:17]}.json")
-    run.save(out)
+    # finalize + git metadata + CI folder layout in one repro.session call
+    run = loop.finalize_run(args.out)
+    if run is None:
+        print("monitoring disabled by environment; no run record")
+        return
     reg = run.regions["train_step"]
-    print(f"run record: {out}")
+    print(f"run record: {loop.session.last_record_path}")
     print(f"parallel efficiency: {reg.pop.get('parallel_efficiency', 0):.3f}  "
           f"MXU util: {reg.pop.get('mxu_utilization', 0):.5f}  "
           f"achieved TFLOP/s/dev: {reg.pop.get('achieved_tflops_per_device', 0):.4f}")

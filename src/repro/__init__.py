@@ -1,0 +1,34 @@
+"""repro — TALP-Pages for JAX.
+
+The public instrumentation surface is ``repro.session`` (one facade, three
+pluggable collector backends, zero-code-change activation via
+``TALP_ENABLE=1``); everything else lives in focused subpackages
+(``repro.core`` collection/reporting internals, ``repro.train``,
+``repro.serve``, ``repro.launch``, ...).
+
+Convenience re-exports (resolved lazily so ``import repro`` stays free):
+
+    repro.start(...)      -> a started PerfSession (off unless env enables)
+    repro.PerfSession     -> repro.session.PerfSession
+    repro.SessionConfig   -> repro.session.SessionConfig
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SESSION_EXPORTS = ("start", "PerfSession", "SessionConfig", "null_session")
+
+__all__ = [*_SESSION_EXPORTS, "session"]
+
+
+def __getattr__(name: str):
+    if name in _SESSION_EXPORTS:
+        return getattr(importlib.import_module("repro.session"), name)
+    if name == "session":
+        return importlib.import_module("repro.session")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

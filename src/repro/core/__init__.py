@@ -10,10 +10,13 @@ Public API:
   TraceRecorder / post_process  the tracing baseline (Score-P/Extrae stand-in)
 """
 
+import warnings as _warnings
+
 from repro.core.factors import compute_pop, validate_pop
 from repro.core.folder import Experiment, git_metadata, merge_history, scan
 from repro.core.hardware import DEFAULT_TARGET, TPU_V5E, TPU_V5P, ChipSpec, get_target
-from repro.core.monitor import MonitorConfig, TalpMonitor
+from repro.core.monitor import MonitorConfig
+from repro.core.monitor import TalpMonitor as _TalpMonitorImpl
 from repro.core.profile import StepProfile
 from repro.core.records import (
     GLOBAL_REGION,
@@ -29,7 +32,35 @@ from repro.core.regression import ComputationShift, Finding, detect, explain_com
 from repro.core.report import badge_svg, generate_report
 from repro.core.scaling import ScalingTable, build_table, latest_per_config, render_text
 from repro.core.timeseries import build_series
-from repro.core.tracer import TraceRecorder, post_process, trace_storage_bytes
+from repro.core.tracer import TraceRecorder as _TraceRecorderImpl
+from repro.core.tracer import post_process, trace_storage_bytes
+
+
+def _deprecated(old: str) -> None:
+    _warnings.warn(
+        f"constructing {old} directly is deprecated; go through "
+        "repro.session.PerfSession (backend='monitor'|'tracer') — the one "
+        "instrumentation surface. Direct construction will be removed next "
+        "release.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+class TalpMonitor(_TalpMonitorImpl):
+    """Deprecated alias kept for one release; use repro.session.PerfSession."""
+
+    def __init__(self, *args, **kw):
+        _deprecated("repro.core.TalpMonitor")
+        super().__init__(*args, **kw)
+
+
+class TraceRecorder(_TraceRecorderImpl):
+    """Deprecated alias kept for one release; use repro.session.PerfSession."""
+
+    def __init__(self, *args, **kw):
+        _deprecated("repro.core.TraceRecorder")
+        super().__init__(*args, **kw)
 
 __all__ = [
     "TalpMonitor", "MonitorConfig", "StepProfile", "RunRecord", "RegionRecord",

@@ -118,6 +118,8 @@ class _RegionState:
 
 
 class TalpMonitor:
+    name = "monitor"  # satisfies the repro.session.Collector protocol
+
     def __init__(
         self,
         config: MonitorConfig | None = None,
@@ -193,20 +195,28 @@ class TalpMonitor:
                     del self._stack[i]
                     break
 
-    @contextlib.contextmanager
-    def region(self, name: str, sync: Any = None):
-        """Annotate a region. If ``sync_regions`` and the block produces jax
-        values, pass them via ``observe_step``/``mark_device`` or give a
-        ``sync`` pytree to block on at exit."""
+    def region_enter(self, name: str) -> None:
+        """Open a region (pairs with ``region_exit``). The context-manager
+        ``region`` and the ``repro.session`` facade are built on these."""
         if name == GLOBAL_REGION:
             raise ValueError("the Global region is implicit")
         if not self._started:
             self.start()
         self._enter(name)
+
+    def region_exit(self, name: str, sync: Any = None) -> None:
+        self._exit(name, sync)
+
+    @contextlib.contextmanager
+    def region(self, name: str, sync: Any = None):
+        """Annotate a region. If ``sync_regions`` and the block produces jax
+        values, pass them via ``observe_step``/``mark_device`` or give a
+        ``sync`` pytree to block on at exit."""
+        self.region_enter(name)
         try:
             yield self
         finally:
-            self._exit(name, sync)
+            self.region_exit(name, sync)
 
     # ------------------------------------------------------------------
     # per-step observation

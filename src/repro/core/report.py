@@ -47,7 +47,23 @@ function toggleRegion(exp, region, on) {
   document.querySelectorAll('[data-exp="'+exp+'"][data-region="'+region+'"]')
     .forEach(el => { el.style.display = on ? '' : 'none'; });
 }
+function toggleCompMetric(exp, metric) {
+  document.querySelectorAll('[data-exp="'+exp+'"][data-cmetric]')
+    .forEach(el => {
+      el.style.display = (el.getAttribute('data-cmetric') === metric)
+        ? '' : 'none';
+    });
+}
 """
+
+# the per-computation counter metrics the client-side toggle switches
+# between (keys of records.ComputationCounters.METRICS)
+COMP_METRICS = (
+    ("hbm_bytes", "HBM bytes"),
+    ("flops", "FLOPs"),
+    ("collective_operand_bytes", "collective bytes"),
+)
+DEFAULT_COMP_METRIC = "hbm_bytes"
 
 _PALETTE = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e",
             "#8c564b", "#e377c2", "#17becf", "#7f7f7f", "#bcbd22"]
@@ -203,30 +219,100 @@ def table_html(table: _scaling.ScalingTable) -> str:
     return "".join(rows)
 
 
+def _sparkline(
+    vals: list[float], width: int = 96, height: int = 18,
+    color: str = "#1f77b4",
+) -> str:
+    """Inline mini-trend of one computation metric over the run history."""
+    finite = [(i, v) for i, v in enumerate(vals) if v == v]
+    if len(finite) < 2:
+        return ""
+    ys = [v for _, v in finite]
+    ymin, ymax = min(ys), max(ys)
+    if ymax <= ymin:
+        ymax = ymin + (abs(ymin) if ymin else 1.0) * 0.1 + 1e-12
+    n = max(len(vals), 2)
+    pts = " ".join(
+        f"{1 + (width - 2) * i / (n - 1):.1f},"
+        f"{1 + (height - 2) * (1 - (v - ymin) / (ymax - ymin)):.1f}"
+        for i, v in finite
+    )
+    lx, ly = (
+        1 + (width - 2) * finite[-1][0] / (n - 1),
+        1 + (height - 2) * (1 - (finite[-1][1] - ymin) / (ymax - ymin)),
+    )
+    return (
+        f'<svg width="{width}" height="{height}" '
+        'xmlns="http://www.w3.org/2000/svg" style="vertical-align:middle">'
+        f'<polyline points="{pts}" fill="none" stroke="{color}" '
+        'stroke-width="1.2"/>'
+        f'<circle cx="{lx:.1f}" cy="{ly:.1f}" r="1.8" fill="{color}"/></svg>'
+    )
+
+
+def comp_metric_toggle_html(eid: str) -> str:
+    """Radio group driving every ``data-cmetric`` element of an experiment
+    (drill-down sparklines + per-computation time-evolution plots)."""
+    labels = []
+    for key, label in COMP_METRICS:
+        checked = " checked" if key == DEFAULT_COMP_METRIC else ""
+        labels.append(
+            f"<label><input type='radio' name='cmetric_{eid}'{checked} "
+            f"onchange=\"toggleCompMetric('{eid}','{key}')\"/>"
+            f"{html.escape(label)}</label> "
+        )
+    return (
+        "<div class='legend'>per-computation metric: "
+        + "".join(labels)
+        + "</div>"
+    )
+
+
 def computation_breakdown_html(
-    run, eid: str, top_n: int = 8, open_details: bool = False
+    run, eid: str, top_n: int = 8, open_details: bool = False,
+    series_by_region: dict | None = None,
 ) -> str:
     """Per-experiment drill-down: collapsible per-region tables of the
     heaviest HLO computations (typed ``RegionRecord.computations``, schema
     v3). Anchored at ``comps_{eid}`` so regression findings and the
-    time-evolution plots can deep-link into it."""
+    time-evolution plots can deep-link into it. ``series_by_region``
+    (region -> metric -> computation -> values over the run history) adds a
+    trend sparkline per row, switched by the experiment's metric toggle."""
     parts: list[str] = []
+    series_by_region = series_by_region or {}
     for region, reg in run.regions.items():
         comps = reg.top_computations(top_n)
         if not comps:
             continue
+        metric_series = series_by_region.get(region, {})
+        has_spark = any(metric_series.get(m) for m, _ in COMP_METRICS)
         rows = [
             "<table class='pop'><tr><th>computation</th><th>kind</th>"
-            "<th>mult</th><th>GFLOP</th><th>HBM GiB</th><th>coll GiB</th></tr>"
+            "<th>mult</th><th>GFLOP</th><th>HBM GiB</th><th>coll GiB</th>"
+            + ("<th>trend</th>" if has_spark else "")
+            + "</tr>"
         ]
         for c in comps:
+            spark_cells = ""
+            if has_spark:
+                spans = []
+                for m, _label in COMP_METRICS:
+                    vals = metric_series.get(m, {}).get(c.name)
+                    svg = _sparkline(vals) if vals else ""
+                    hide = " style='display:none'" if m != DEFAULT_COMP_METRIC else ""
+                    spans.append(
+                        f"<span data-exp='{eid}' data-cmetric='{m}'{hide}>"
+                        f"{svg}</span>"
+                    )
+                spark_cells = f"<td>{''.join(spans)}</td>"
             rows.append(
                 f"<tr><td class='name'>{html.escape(c.name[:48])}</td>"
                 f"<td>{html.escape(c.kind)}</td>"
                 f"<td>{c.multiplicity:.0f}</td>"
                 f"<td>{c.flops / 1e9:.2f}</td>"
                 f"<td>{c.hbm_bytes / 2**30:.3f}</td>"
-                f"<td>{c.collective_operand_bytes / 2**30:.3f}</td></tr>"
+                f"<td>{c.collective_operand_bytes / 2**30:.3f}</td>"
+                f"{spark_cells}</tr>"
             )
         rows.append("</table>")
         parts.append(
@@ -292,18 +378,31 @@ def generate_report(
             body.append(f"<h3>Scaling efficiency — region <code>{html.escape(region)}</code></h3>")
             body.append(table_html(table))
 
+        # --- time-evolution series (also feeds the drill-down sparklines) ---
+        cfg_series = _timeseries.build_series(exp.runs)
+        series_by_label = {cs.label: cs for cs in cfg_series}
+
         # --- per-computation drill-down (latest run that recorded one) ---
         has_breakdown = False
         if top_computations > 0:
             for run in reversed(latest):
-                bd = computation_breakdown_html(run, eid, top_computations)
+                cs = series_by_label.get(run.resources.label)
+                series_by_region = {
+                    rn: {
+                        m: rs.computation_series(m) for m, _ in COMP_METRICS
+                    }
+                    for rn, rs in (cs.regions if cs else {}).items()
+                    if len(rs.points) >= 2
+                }
+                bd = computation_breakdown_html(
+                    run, eid, top_computations,
+                    series_by_region=series_by_region,
+                )
                 if bd:
+                    body.append(comp_metric_toggle_html(eid))
                     body.append(bd)
                     has_breakdown = True
                     break
-
-        # --- time-evolution plots ---
-        cfg_series = _timeseries.build_series(exp.runs)
         for cs in cfg_series:
             if all(len(rs.points) < 2 for rs in cs.regions.values()):
                 continue
@@ -338,23 +437,40 @@ def generate_report(
                     svg = _svg_plot(f"{gtitle} ({cs.label})", series, xlabels, y01=y01)
                     if svg:
                         body.append(f"<span class='plot'>{svg}</span>")
-                # per-computation time evolution (heaviest HLO computations)
+                # per-computation time evolution (heaviest HLO computations;
+                # one plot per counter metric, switched client-side by the
+                # experiment's metric toggle)
                 if top_computations > 0:
-                    comp_names = rs.top_computation_names(min(5, top_computations))
-                    if comp_names:
-                        cseries = rs.computation_series("hbm_bytes")
+                    any_comp_plot = False
+                    for metric, mlabel in COMP_METRICS:
+                        comp_names = rs.top_computation_names(
+                            min(5, top_computations), metric=metric
+                        )
+                        if not comp_names:
+                            continue
+                        cseries = rs.computation_series(metric)
                         svg = _svg_plot(
-                            f"Top computations, HBM bytes ({cs.label})",
+                            f"Top computations, {mlabel} ({cs.label})",
                             [(name[-28:], cseries[name]) for name in comp_names],
                             xlabels,
                         )
-                        if svg:
-                            body.append(f"<span class='plot'>{svg}</span>")
-                        if has_breakdown:
-                            body.append(
-                                f"<p class='meta'><a href='#comps_{eid}'>"
-                                "per-computation drill-down</a></p>"
-                            )
+                        if not svg:
+                            continue
+                        hide = (
+                            " style='display:none'"
+                            if metric != DEFAULT_COMP_METRIC
+                            else ""
+                        )
+                        body.append(
+                            f"<span class='plot' data-exp='{eid}' "
+                            f"data-cmetric='{metric}'{hide}>{svg}</span>"
+                        )
+                        any_comp_plot = True
+                    if any_comp_plot and has_breakdown:
+                        body.append(
+                            f"<p class='meta'><a href='#comps_{eid}'>"
+                            "per-computation drill-down</a></p>"
+                        )
                 body.append("</div>")
 
             # --- findings (regressions / improvements) ---

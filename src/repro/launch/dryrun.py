@@ -15,6 +15,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
   PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
       --shape train_4k --multi-pod both --out results/dryrun
+
+The sweep itself is uninstrumented; run it under ``TALP_ENABLE=1`` and every
+cell becomes a region of an env-activated ``repro.session`` (lower+compile
+wall time, the cell's static counters) with one TALP run record written next
+to the cell artifacts — the paper's zero-code-change LD_PRELOAD analogue.
 """
 
 import argparse
@@ -241,12 +246,23 @@ def main(argv=None) -> int:
     shapes = [s.name for s in SHAPES] if args.shape == "all" else args.shape.split(",")
     pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
 
+    import repro
+
+    session = repro.start("dryrun")  # no-op unless TALP_ENABLE=1
+
     n_fail = 0
     for arch in archs:
         for shape in shapes:
             for mp in pods:
+                tag = f"{arch}__{shape}__{'multipod' if mp else 'singlepod'}"
                 t0 = time.time()
-                rec = run_cell(arch, shape, mp, args.out, args.force, args.optimized)
+                with session.region(tag):
+                    rec = run_cell(arch, shape, mp, args.out, args.force,
+                                   args.optimized)
+                if rec.get("status") == "ok" and "profile" in rec:
+                    session.attach_static(
+                        tag, StepProfile.from_json(rec["profile"])
+                    )
                 dt = time.time() - t0
                 status = rec["status"]
                 line = f"{arch:24s} {shape:12s} {'2x16x16' if mp else '16x16':8s} {status:8s} {dt:6.1f}s"
@@ -265,6 +281,8 @@ def main(argv=None) -> int:
                     n_fail += 1
                     line += f" {rec['error'][:120]}"
                 print(line, flush=True)
+    if session.finalize(os.path.join(args.out, "talp")) is not None:
+        print(f"[dryrun] TALP record: {session.last_record_path}", flush=True)
     return 1 if n_fail else 0
 
 

@@ -7,7 +7,6 @@
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main(argv=None) -> int:
@@ -26,11 +25,12 @@ def main(argv=None) -> int:
 
     from repro import compat
     from repro.configs import get_config, smoke_config
-    from repro.core import MonitorConfig, ResourceConfig, TalpMonitor
+    from repro.core import ResourceConfig
     from repro.launch.mesh import make_host_mesh
     from repro.layers.common import init_params
     from repro.models import transformer as T
     from repro.serve.serve import BatchScheduler, ServeConfig
+    from repro.session import PerfSession, SessionConfig
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_only:
@@ -38,31 +38,32 @@ def main(argv=None) -> int:
     mesh = make_host_mesh()
     params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
-    mon = TalpMonitor(
-        MonitorConfig(app_name=f"serve-{args.arch}", lb_sample_every=1),
+    session = PerfSession(
+        SessionConfig(app_name=f"serve-{args.arch}", backend="monitor",
+                      lb_sample_every=1),
         ResourceConfig(num_hosts=1, devices_per_host=len(jax.devices())),
     )
     rng = np.random.default_rng(0)
-    with compat.use_mesh(mesh), mon:
+    with compat.use_mesh(mesh), session:
         sched = BatchScheduler(
-            cfg, mesh, ServeConfig(max_len=args.max_len, batch=args.batch), params
+            cfg, mesh, ServeConfig(max_len=args.max_len, batch=args.batch),
+            params, session=session,
         )
         for rid in range(args.requests):
             prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
             sched.submit(prompt, request_id=rid, max_new=args.max_new)
-        with mon.region("decode"):
-            steps = 0
-            while len(sched.completed) < args.requests and steps < 10 * args.max_len:
-                sched.step()
-                mon.observe_step(sched.tokens)
-                steps += 1
+        steps = 0
+        while len(sched.completed) < args.requests and steps < 10 * args.max_len:
+            sched.step()
+            steps += 1
+        sched.drain()
     print(f"[serve] completed {len(sched.completed)}/{args.requests} requests "
           f"in {steps} decode steps")
-    if args.talp_out:
-        run = mon.finalize()
-        path = os.path.join(args.talp_out, "talp_serve.json")
-        run.save(path)
-        print(f"[serve] TALP record: {path}")
+    session.finalize(args.talp_out or None)
+    if session.last_record_path:
+        print(f"[serve] TALP record: {session.last_record_path}")
+    elif args.talp_out:
+        print("[serve] monitoring disabled by environment; no run record")
     return 0
 
 

@@ -45,7 +45,6 @@ def main(argv=None) -> int:
         print(f"[launch] distributed init skipped: {e}")
 
     from repro.configs import get_config, optimized_config, smoke_config
-    from repro.core import git_metadata
     from repro.data.pipeline import DataConfig, SyntheticLM
     from repro.launch.mesh import make_host_mesh
     from repro.optim import AdamWConfig
@@ -77,15 +76,13 @@ def main(argv=None) -> int:
     h = loop.metrics_history
     print(f"[launch] {args.arch}: steps {h[0]['step']}..{h[-1]['step']} "
           f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
-    if args.talp_out:
-        run = loop.finalize_run()
-        run.metadata.update(git_metadata())
-        path = os.path.join(
-            args.talp_out,
-            f"talp_{run.resources.label}_{run.timestamp.replace(':', '')[:17]}.json",
-        )
-        run.save(path)
-        print(f"[launch] TALP record: {path}")
+    # git metadata + CI folder layout in one call (repro.session); writes
+    # only when a destination resolves (--talp-out or TALP_OUT)
+    loop.finalize_run(args.talp_out or None)
+    if loop.session.last_record_path:
+        print(f"[launch] TALP record: {loop.session.last_record_path}")
+    elif args.talp_out:
+        print("[launch] monitoring disabled by environment; no run record")
     return 0
 
 

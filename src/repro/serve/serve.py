@@ -130,12 +130,33 @@ class BatchScheduler:
     ``drain()``). Completion is count-based (``max_new``), so the host never
     needs token *values* mid-flight — N decode steps cost one transfer
     instead of N.
+
+    Monitoring goes through ``repro.session``: pass a ``PerfSession`` and
+    every decode dispatch is a visit of its ``decode`` region with the step
+    observed and the static StepProfile derived from the compiled decode
+    step; with no session (or a null backend) the scheduler runs fully
+    uninstrumented at zero cost.
     """
 
-    def __init__(self, cfg, mesh, scfg: ServeConfig, params):
+    def __init__(self, cfg, mesh, scfg: ServeConfig, params, session=None):
+        from repro.session import PerfSession, SessionConfig
+
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
         self.params = params
-        self.decode = jax.jit(make_decode_step(cfg, mesh), donate_argnums=(3,))
+        # default: off, but env-activatable (TALP_ENABLE=1) like every other
+        # entry point; the caller owns finalize() (also via self.session)
+        self.session = session if session is not None else PerfSession(
+            SessionConfig(app_name="serve", backend="null")
+        )
+        self.decode = self.session.wrap_step(
+            jax.jit(make_decode_step(cfg, mesh), donate_argnums=(3,)),
+            region="decode",
+            derive=True,
+            num_devices=mesh.devices.size,
+            # observe the sampled tokens only: blocking on the donated cache
+            # tuple would serialize the decode pipeline
+            observe=lambda out: {"outputs": out[0]},
+        )
         self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.tokens = jnp.zeros((scfg.batch, 1), jnp.int32)
         self.queue: list[dict] = []

@@ -1,10 +1,13 @@
 """Fault-tolerant training loop with first-class TALP monitoring.
 
-Integration exactly mirrors the paper's GENE-X CI setup (§Integration):
-the loop owns an ``initialize`` region (compile + restore) and a
-``train_step`` region (the paper's ``timestep``); per-step observables
-(tokens per shard, expert loads, host heartbeat) stream into the monitor;
-at exit one JSON artifact is written for TALP-Pages.
+Integration exactly mirrors the paper's GENE-X CI setup (§Integration),
+expressed through the one instrumentation surface (``repro.session``): the
+loop owns a ``PerfSession`` with an ``initialize`` region (compile +
+restore) and a ``train_step`` region (the paper's ``timestep``) attached by
+``session.wrap_step`` — which also derives the static StepProfile from the
+compiled step and streams the per-step observables (tokens per shard,
+expert loads, host heartbeat) into the collector. ``finalize_run(out_dir)``
+writes the JSON artifact for TALP-Pages in one call.
 
 Fault tolerance:
   * checkpoint every ``ckpt_every`` steps (async, atomic commit);
@@ -20,19 +23,17 @@ Fault tolerance:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
 from repro.checkpoint import CheckpointManager
-from repro.core import MonitorConfig, ResourceConfig, StepProfile, TalpMonitor
+from repro.core import ResourceConfig
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import devices_per_pod
-from repro.train.train import TrainConfig, init_state, jit_train_step
+from repro.session import PerfSession, SessionConfig
+from repro.train.train import TrainConfig, compile_train_step, init_state
 
 
 @dataclasses.dataclass
@@ -43,6 +44,7 @@ class LoopConfig:
     seed: int = 0
     straggler_threshold: float = 0.8
     monitor_app_name: str = "train"
+    monitor_backend: str = "monitor"  # PerfSession backend (env can override)
     lb_sample_every: int = 1
     fail_at_step: int | None = None  # crash injection for restart tests
     host_times_fn: Callable[[int], Any] | None = None  # heartbeat source
@@ -50,6 +52,9 @@ class LoopConfig:
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+_UNSAMPLED = object()  # heartbeat not yet read for the current step
 
 
 class TrainLoop:
@@ -75,9 +80,10 @@ class TrainLoop:
             mesh=sizes,
             num_pods=sizes.get("pod", 1),
         )
-        self.monitor = TalpMonitor(
-            MonitorConfig(
+        self.session = PerfSession(
+            SessionConfig(
                 app_name=loop_cfg.monitor_app_name,
+                backend=loop_cfg.monitor_backend,
                 lb_sample_every=loop_cfg.lb_sample_every,
             ),
             self.resources,
@@ -86,41 +92,32 @@ class TrainLoop:
             CheckpointManager(loop_cfg.ckpt_dir) if loop_cfg.ckpt_dir else None
         )
         self.metrics_history: list[dict] = []
+        self._cur_step = 0
+        self._host_times: Any = _UNSAMPLED
 
     # ------------------------------------------------------------------
 
     def run(self) -> "TrainLoop":
-        mon = self.monitor
-        mon.start()
-        with mon.region("initialize"):
-            state, start_step, step_fn, profile = self._initialize()
-            mon.attach_static("train_step", profile)
+        ses = self.session
+        ses.start()
+        with ses.region("initialize"):
+            state, start_step, step_fn = self._initialize()
 
-        pod = devices_per_pod(self.mesh)
         try:
             for step in range(start_step, self.loop.steps):
                 if self.loop.fail_at_step is not None and step == self.loop.fail_at_step:
                     raise InjectedFailure(f"injected failure at step {step}")
                 batch = self.data.batch_at(step)
-                with mon.region("train_step"):
-                    state, metrics = step_fn(state, batch)
-                    host_times = (
-                        self.loop.host_times_fn(step)
-                        if self.loop.host_times_fn
-                        else None
-                    )
-                    mon.observe_step(
-                        metrics,
-                        tokens_per_shard=metrics.get("tokens_per_shard"),
-                        expert_load=metrics.get("expert_load"),
-                        host_times=host_times,
-                        pod_size=(
-                            self.resources.num_hosts // self.resources.num_pods
-                            if host_times is not None and self.resources.num_pods > 1
-                            else None
-                        ),
-                    )
-                self._check_straggler(step, host_times)
+                self._cur_step = step
+                self._host_times = _UNSAMPLED
+                state, metrics = step_fn(state, batch)
+                # the heartbeat is read post-step by _observe (inside the
+                # train_step region); sample it here only when a null
+                # backend skipped observation — straggler mitigation is a
+                # loop feature, not an instrumentation feature
+                if self._host_times is _UNSAMPLED:
+                    self._host_times = self._sample_host_times()
+                self._check_straggler(step, self._host_times)
                 self.metrics_history.append(
                     {"step": step, "loss": float(metrics["loss"])}
                 )
@@ -133,7 +130,7 @@ class TrainLoop:
         finally:
             if self.ckpt:
                 self.ckpt.wait()
-            mon.stop()
+            ses.stop()
         self.final_state = state
         return self
 
@@ -149,24 +146,46 @@ class TrainLoop:
         if self.ckpt and self.ckpt.latest() is not None:
             state_tree, start = self.ckpt.restore(state_tree)
         example = self.data.batch_at(0)
-        with compat.use_mesh(self.mesh):
-            jitted = jit_train_step(self.cfg, self.mesh, self.tcfg)(example)
-            lowered = jitted.lower(state_tree, example)
-            compiled = lowered.compile()
+        compiled, call = compile_train_step(
+            self.cfg, self.mesh, self.tcfg, state_tree, example
+        )
         from repro.models.flops import train_step_model_flops
 
-        profile = StepProfile.from_compiled(
-            compiled,
+        step_fn = self.session.wrap_step(
+            call,
+            region="train_step",
+            compiled=compiled,
             num_devices=self.mesh.devices.size,
             devices_per_pod=devices_per_pod(self.mesh),
             model_flops=train_step_model_flops(self.cfg, example["labels"].shape),
+            observe=self._observe,
+        )
+        return state_tree, start, step_fn
+
+    def _sample_host_times(self):
+        """Read the per-host heartbeat for the step that just executed."""
+        return (
+            self.loop.host_times_fn(self._cur_step)
+            if self.loop.host_times_fn
+            else None
         )
 
-        def step_fn(s, b):
-            with compat.use_mesh(self.mesh):
-                return compiled(s, b)
-
-        return state_tree, start, step_fn, profile
+    def _observe(self, out) -> dict:
+        """Map one step result to the monitor observables (wrap_step hook;
+        runs inside the train_step region, after the step executed)."""
+        _state, metrics = out
+        host_times = self._host_times = self._sample_host_times()
+        return {
+            "outputs": metrics,
+            "tokens_per_shard": metrics.get("tokens_per_shard"),
+            "expert_load": metrics.get("expert_load"),
+            "host_times": host_times,
+            "pod_size": (
+                self.resources.num_hosts // self.resources.num_pods
+                if host_times is not None and self.resources.num_pods > 1
+                else None
+            ),
+        }
 
     def _check_straggler(self, step: int, host_times) -> None:
         if host_times is None:
@@ -180,6 +199,9 @@ class TrainLoop:
             if self.on_straggler:
                 self.on_straggler(step, lb)
 
-    def finalize_run(self):
-        run = self.monitor.finalize()
-        return run
+    def finalize_run(self, out_dir: str | None = None):
+        """One call for the whole artifact choreography: finalize the
+        session's RunRecord and, when a destination resolves (``out_dir``,
+        ``TALP_OUT``, or the session config), inject git metadata and save
+        into the CI folder layout."""
+        return self.session.finalize(out_dir)

@@ -164,6 +164,24 @@ def make_train_step(cfg, mesh, tcfg: TrainConfig):
     return train_step
 
 
+def compile_train_step(cfg, mesh, tcfg: TrainConfig, state_tree, example):
+    """AOT-lower and compile the sharded train step against ``example``'s
+    shapes. Returns ``(compiled, call)``: the compiled executable (what
+    ``PerfSession.wrap_step`` derives the StepProfile from) and a callable
+    that executes it under the mesh context."""
+    from repro import compat
+
+    with compat.use_mesh(mesh):
+        jitted = jit_train_step(cfg, mesh, tcfg)(example)
+        compiled = jitted.lower(state_tree, example).compile()
+
+    def call(state, batch):
+        with compat.use_mesh(mesh):
+            return compiled(state, batch)
+
+    return compiled, call
+
+
 def jit_train_step(cfg, mesh, tcfg: TrainConfig, donate: bool = True):
     """pjit-wrapped step with explicit in/out shardings."""
     from repro import compat

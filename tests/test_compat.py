@@ -230,3 +230,35 @@ def test_no_version_gated_jax_access_outside_compat():
         if "jax.sharding.AxisType" in p.read_text():
             offenders.append(str(p.relative_to(root)))
     assert not offenders, f"version-gated JAX access outside compat.py: {offenders}"
+
+
+# ---------------------------------------------------------------------------
+# policy: one instrumentation surface — collectors are constructed only
+# behind the repro.session facade (same grep style as the compat rule)
+# ---------------------------------------------------------------------------
+
+
+def test_collectors_constructed_only_behind_the_session_facade():
+    """Production code must reach instrumentation through PerfSession; the
+    concrete ``TalpMonitor``/``TraceRecorder`` constructors are private to
+    the session module (plus their defining modules and the one-release
+    deprecation shims in repro.core). Tests may exercise the legacy path."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    construct = re.compile(r"\b(?:TalpMonitor|TraceRecorder)\s*\(")
+    allowed = {
+        "src/repro/session.py",       # the facade's backends
+        "src/repro/core/monitor.py",  # the implementations themselves
+        "src/repro/core/tracer.py",
+        "src/repro/core/__init__.py",  # deprecation shims (one release)
+    }
+    offenders = []
+    for sub in ("src", "benchmarks", "examples"):
+        for p in (root / sub).rglob("*.py"):
+            rel = str(p.relative_to(root))
+            if rel in allowed:
+                continue
+            if construct.search(p.read_text()):
+                offenders.append(rel)
+    assert not offenders, (
+        f"direct collector construction outside repro.session: {offenders}"
+    )

@@ -1,0 +1,339 @@
+"""PerfSession — the single instrumentation surface (api redesign).
+
+Covers: backend selection by config and by environment (the LD_PRELOAD
+analogue), region as context manager and decorator, wrap_step profile
+derivation and step counting, the null backend's zero-footprint contract,
+monitor/tracer backend parity on the POP factors (the paper's Tables 6/7
+cross-tool agreement check, as a unit test), one-call finalize into the CI
+folder layout, top-level re-exports, and the legacy deprecation shims.
+"""
+
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import factors as F
+from repro.core.profile import StepProfile
+from repro.core.records import GLOBAL_REGION, ResourceConfig, RunRecord
+from repro.session import (
+    ENV_BACKEND,
+    ENV_ENABLE,
+    ENV_OUT,
+    NullCollector,
+    PerfSession,
+    SessionConfig,
+    env_backend,
+)
+
+RES = ResourceConfig(num_hosts=2, devices_per_host=4)
+
+
+def make_session(backend, tmp_path=None, metadata=None, **kw):
+    """A clocked session immune to the ambient environment."""
+    t = [0.0]
+    cfg = SessionConfig(
+        app_name="t", backend=backend, sync_regions=False, lb_sample_every=1,
+        clock=lambda: t[0], respect_env=False,
+        trace_dir=str(tmp_path / "trace") if tmp_path is not None else "",
+        **kw,
+    )
+    return PerfSession(cfg, RES, metadata=metadata), t
+
+
+# ---------------------------------------------------------------------------
+# env activation — zero code change, the LD_PRELOAD analogue
+# ---------------------------------------------------------------------------
+
+
+def test_env_backend_resolution(monkeypatch):
+    monkeypatch.delenv(ENV_ENABLE, raising=False)
+    monkeypatch.delenv(ENV_BACKEND, raising=False)
+    assert env_backend() is None
+    monkeypatch.setenv(ENV_ENABLE, "1")
+    assert env_backend() == "monitor"
+    assert env_backend(default="tracer") == "tracer"
+    monkeypatch.setenv(ENV_BACKEND, "tracer")
+    assert env_backend() == "tracer"
+    monkeypatch.setenv(ENV_ENABLE, "0")
+    assert env_backend() == "null"
+    monkeypatch.setenv(ENV_ENABLE, "1")
+    monkeypatch.setenv(ENV_BACKEND, "bogus")
+    with pytest.raises(ValueError):
+        env_backend()
+
+
+def test_env_enables_disabled_session(monkeypatch):
+    monkeypatch.setenv(ENV_ENABLE, "1")
+    monkeypatch.delenv(ENV_BACKEND, raising=False)
+    ses = PerfSession()  # default config: backend="null"
+    assert ses.enabled and ses.backend == "monitor"
+
+
+def test_env_kill_switch_overrides_config(monkeypatch):
+    monkeypatch.setenv(ENV_ENABLE, "0")
+    ses = PerfSession(SessionConfig(backend="monitor"))
+    assert not ses.enabled and isinstance(ses.collector, NullCollector)
+
+
+def test_respect_env_false_ignores_environment(monkeypatch):
+    monkeypatch.setenv(ENV_ENABLE, "1")
+    ses = PerfSession(SessionConfig(backend="null", respect_env=False))
+    assert not ses.enabled
+
+
+# ---------------------------------------------------------------------------
+# regions: context manager AND decorator
+# ---------------------------------------------------------------------------
+
+
+def test_region_context_manager_accumulates():
+    ses, t = make_session("monitor")
+    ses.start()
+    for _ in range(3):
+        with ses.region("r"):
+            t[0] += 2.0
+        t[0] += 1.0
+    run = ses.finalize(git=False)
+    assert run.regions["r"].measurements.elapsed_s == pytest.approx(6.0)
+    assert run.regions["r"].measurements.num_visits == 3
+    assert run.regions[GLOBAL_REGION].measurements.elapsed_s == pytest.approx(9.0)
+
+
+def test_region_as_decorator():
+    ses, t = make_session("monitor")
+    ses.start()
+
+    @ses.region("work")
+    def work():
+        t[0] += 0.5
+        return 42
+
+    assert work() == 42 and work() == 42
+    run = ses.finalize(git=False)
+    assert run.regions["work"].measurements.num_visits == 2
+    assert run.regions["work"].measurements.elapsed_s == pytest.approx(1.0)
+
+
+def test_null_region_is_shared_noop():
+    ses, _ = make_session("null")
+    r1, r2 = ses.region("a"), ses.region("b")
+    assert r1 is r2  # one shared handle, no per-visit allocation
+    with r1:
+        pass
+    fn = lambda: 1
+    assert r1(fn) is fn  # decorator returns the function unchanged
+
+
+# ---------------------------------------------------------------------------
+# wrap_step
+# ---------------------------------------------------------------------------
+
+
+def test_wrap_step_null_returns_function_unchanged():
+    ses, _ = make_session("null")
+    fn = lambda x: x
+    assert ses.wrap_step(fn, region="step") is fn
+    assert ses.finalize() is None
+
+
+def test_wrap_step_derives_profile_from_compiled_and_counts_steps():
+    import jax
+    import jax.numpy as jnp
+
+    compiled = jax.jit(lambda a, b: jnp.tanh(a @ b).sum()).lower(
+        jnp.ones((16, 16)), jnp.ones((16, 16))
+    ).compile()
+    ses, t = make_session("monitor")
+    ses.start()
+    step = ses.wrap_step(compiled, region="step", num_devices=1)
+    for _ in range(4):
+        t[0] += 0.1
+        step(jnp.ones((16, 16)), jnp.ones((16, 16)))
+    run = ses.finalize(git=False)
+    reg = run.regions["step"]
+    assert reg.measurements.num_steps == 4
+    one_step = StepProfile.from_compiled(compiled, num_devices=1)
+    assert reg.counters.useful_flops == pytest.approx(4 * one_step.flops)
+    assert reg.computations  # schema-v3 breakdown flows through the facade
+
+
+def test_wrap_step_lazily_lowers_jitted_functions():
+    import jax
+    import jax.numpy as jnp
+
+    jitted = jax.jit(lambda a: (a @ a).sum())
+    ses, t = make_session("monitor")
+    ses.start()
+    step = ses.wrap_step(jitted, region="step", derive=True, num_devices=1)
+    for _ in range(3):
+        step(jnp.ones((8, 8)))
+    run = ses.finalize(git=False)
+    reg = run.regions["step"]
+    assert reg.measurements.num_steps == 3
+    assert reg.counters.useful_flops > 0  # profile derived on first call
+
+
+def test_wrap_step_observe_hook_feeds_load_balance():
+    ses, t = make_session("monitor")
+    ses.start()
+    step = ses.wrap_step(
+        lambda x: {"tokens_per_shard": [100, 50]},
+        region="step",
+    )
+    step(None)
+    run = ses.finalize(git=False)
+    assert run.regions["step"].measurements.data_lb == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# backend parity — the paper's cross-tool agreement check (Tables 6/7)
+# ---------------------------------------------------------------------------
+
+PROFILE = StepProfile(
+    num_devices=8, flops=1e12, hbm_bytes=1e10, collective_bytes_ici=1e8,
+    model_flops=8e11, collective_counts={"all-reduce": 3, "all-gather": 2},
+)
+
+
+def _drive(ses, t, steps=20):
+    """The same synthetic workload, whichever backend is plugged in."""
+    ses.attach_static("timestep", PROFILE)
+    ses.start()
+    with ses.region("timestep"):
+        for _ in range(steps):
+            t[0] += 0.01
+            ses.observe_step(
+                tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0]
+            )
+    return ses.finalize(git=False)
+
+
+def test_monitor_and_tracer_backends_agree_on_pop_factors(tmp_path):
+    runs = {}
+    for backend in ("monitor", "tracer"):
+        ses, t = make_session(backend, tmp_path=tmp_path / backend)
+        runs[backend] = _drive(ses, t)
+
+    a = runs["monitor"].regions["timestep"]
+    b = runs["tracer"].regions["timestep"]
+    assert a.measurements.num_steps == b.measurements.num_steps == 20
+    np.testing.assert_allclose(a.measurements.data_lb, b.measurements.data_lb,
+                               rtol=1e-6)
+    np.testing.assert_allclose(a.measurements.expert_lb,
+                               b.measurements.expert_lb, rtol=1e-6)
+    assert a.counters.useful_flops == b.counters.useful_flops
+    for key in (F.DATA_LB, F.EXPERT_LB, F.COMM_EFF, F.ICI_COMM_EFF,
+                F.PARALLEL_EFF):
+        np.testing.assert_allclose(a.pop[key], b.pop[key], rtol=1e-5,
+                                   err_msg=key)
+    # both backends carry the same typed per-computation contract
+    assert set(a.computations) == set(b.computations)
+
+
+# ---------------------------------------------------------------------------
+# finalize: git metadata + CI folder layout in one call
+# ---------------------------------------------------------------------------
+
+
+def test_finalize_saves_into_ci_folder_layout(tmp_path):
+    ses, t = make_session("monitor")
+    ses.start()
+    with ses.region("r"):
+        t[0] += 1.0
+    run = ses.finalize(str(tmp_path / "talp" / "case" / "history"))
+    assert run is not None and ses.last_record_path is not None
+    reloaded = RunRecord.load(ses.last_record_path)
+    assert reloaded.schema_version == 3
+    assert reloaded.regions["r"].measurements.elapsed_s == pytest.approx(1.0)
+    # the `talp metadata` step happened inside finalize (repo has git)
+    assert "git_commit" in reloaded.metadata
+
+
+def test_env_out_redirects_artifacts(tmp_path, monkeypatch):
+    monkeypatch.delenv(ENV_ENABLE, raising=False)
+    monkeypatch.setenv(ENV_OUT, str(tmp_path / "redirected"))
+    t = [0.0]
+    ses = PerfSession(
+        SessionConfig(app_name="t", backend="monitor", clock=lambda: t[0]),
+        RES,
+    )
+    ses.start()
+    run = ses.finalize(str(tmp_path / "ignored"))
+    assert run is not None
+    assert ses.last_record_path.startswith(str(tmp_path / "redirected"))
+
+
+def test_respect_env_false_never_writes_to_env_out(tmp_path, monkeypatch):
+    """A benchmark/fixture session must not leak synthetic records into a
+    globally exported TALP_OUT (it would corrupt the real CI history)."""
+    monkeypatch.setenv(ENV_OUT, str(tmp_path / "ci_history"))
+    ses, t = make_session("monitor")  # respect_env=False
+    ses.start()
+    run = ses.finalize(git=False)
+    assert run is not None
+    assert ses.last_record_path is None
+    assert not (tmp_path / "ci_history").exists()
+
+
+def test_tracer_finalize_without_start_yields_empty_valid_run(tmp_path):
+    ses, _ = make_session("tracer", tmp_path=tmp_path)  # trace_dir configured
+    run = ses.finalize(git=False)
+    assert run is not None and run.regions[GLOBAL_REGION] is not None
+
+
+def test_pre_start_hooks_are_safe_on_every_backend(tmp_path):
+    """The zero-code-change backend swap means a program that is valid
+    under one backend must not crash under another."""
+    for backend in ("monitor", "tracer", "null"):
+        ses, _ = make_session(backend, tmp_path=tmp_path / backend)
+        ses.observe_step({"loss": 1.0})  # before start: silently ignored
+        ses.mark_device()
+        ses.attach_static("r", PROFILE)
+
+
+def test_explicit_metadata_wins_over_git():
+    ses, t = make_session("monitor", metadata={"git_commit_short": "cafe1234"})
+    ses.start()
+    run = ses.finalize()
+    assert run.metadata["git_commit_short"] == "cafe1234"
+
+
+# ---------------------------------------------------------------------------
+# top-level re-exports + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_top_level_exports(monkeypatch):
+    monkeypatch.delenv(ENV_ENABLE, raising=False)
+    assert repro.PerfSession is PerfSession
+    assert repro.SessionConfig is SessionConfig
+    ses = repro.start("x")  # off unless the environment enables it
+    assert isinstance(ses, PerfSession) and not ses.enabled
+    import repro.session as session_mod
+
+    assert repro.session is session_mod
+
+
+def test_legacy_constructors_warn(tmp_path):
+    from repro.core import MonitorConfig, TalpMonitor, TraceRecorder
+
+    with pytest.warns(DeprecationWarning, match="PerfSession"):
+        TalpMonitor(MonitorConfig())
+    with pytest.warns(DeprecationWarning, match="PerfSession"):
+        TraceRecorder(str(tmp_path / "tr"), ResourceConfig())
+
+
+def test_internal_paths_do_not_warn(tmp_path):
+    """The session backends construct the *implementation* classes — no
+    deprecation noise from the supported path."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ses, t = make_session("monitor")
+        ses.start()
+        ses.finalize(git=False)
+        ses2, _ = make_session("tracer", tmp_path=tmp_path)
+        ses2.start()
+        ses2.finalize(git=False)
