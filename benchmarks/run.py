@@ -7,11 +7,14 @@ Prints ``name,us_per_call,derived`` CSV lines.
   tables67_*  weak/strong scaling-efficiency tables   (paper Tables 6/7)
   figure7_*   regression detect + explain             (paper Figure 7)
   roofline_*  §Roofline aggregation from the dry-run artifacts
+  serve_*     overlapped vs stop-the-world serving    (BENCH_serve.json)
 
 ``--check`` is the CI gate: it runs the tier-1 suite
 (``PYTHONPATH=src python -m pytest -x -q``) plus a cold-vs-cached
-``analyze_hlo`` timing assertion, so the HLO parse cache cannot silently
-regress even if the equivalent unit test is edited away.
+``analyze_hlo`` timing assertion (so the HLO parse cache cannot silently
+regress even if the equivalent unit test is edited away) plus the cheap
+shape of ``benchmarks/serve_throughput.py`` (overlapped chunked prefill
+must keep producing identical tokens with no decode gap while prefilling).
 """
 
 from __future__ import annotations
@@ -81,7 +84,14 @@ def check() -> int:
         print(f"[check] {e}", file=sys.stderr)
         return 1
     print(line)
-    print("[check] tier-1 suite green, hlo cache OK")
+    from benchmarks import serve_throughput
+
+    try:
+        print(serve_throughput.check())
+    except AssertionError as e:
+        print(f"[check] serve overlap: {e}", file=sys.stderr)
+        return 1
+    print("[check] tier-1 suite green, hlo cache OK, serve overlap OK")
     return 0
 
 
@@ -89,11 +99,19 @@ def main() -> None:
     if "--check" in sys.argv[1:]:
         sys.exit(check())
 
-    from benchmarks import overhead, postprocessing, regression, roofline, scaling_tables
+    from benchmarks import (
+        overhead,
+        postprocessing,
+        regression,
+        roofline,
+        scaling_tables,
+        serve_throughput,
+    )
 
     lines: list[str] = []
     failures = 0
-    for mod in (overhead, postprocessing, scaling_tables, regression, roofline):
+    for mod in (overhead, postprocessing, scaling_tables, regression, roofline,
+                serve_throughput):
         name = mod.__name__.split(".")[-1]
         try:
             lines += mod.main()

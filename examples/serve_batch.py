@@ -1,14 +1,17 @@
-"""Batched serving demo: continuous batching scheduler + TALP monitoring of
-the serving loop through ``repro.session``, emitting a run record suitable
-for the same CI report as training runs.
+"""Batched serving demo: continuous batching with chunked prefill-on-attach
+overlapped with in-flight decode + TALP monitoring of the serving loop
+through ``repro.session``, emitting a run record suitable for the same CI
+report as training runs.
 
     PYTHONPATH=src python examples/serve_batch.py
 
 The scheduler takes the session directly — every decode dispatch is a visit
-of its ``decode`` region, with the static StepProfile derived from the
-compiled decode step by ``session.wrap_step``. No code edits needed to
-re-plug it: ``TALP_ENABLE=1 TALP_BACKEND=tracer`` swaps the collector,
-``TALP_ENABLE=0`` turns the whole thing off.
+of its ``decode`` region and every prefill chunk a visit of its ``prefill``
+region, each with its own StepProfile derived from the compiled step by
+``session.wrap_step``, so the report tracks prefill and decode factors
+separately. No code edits needed to re-plug it: ``TALP_ENABLE=1
+TALP_BACKEND=tracer`` swaps the collector, ``TALP_ENABLE=0`` turns the
+whole thing off.
 """
 
 import os
@@ -42,8 +45,11 @@ def main():
 
     rng = np.random.default_rng(0)
     with compat.use_mesh(mesh), session:
-        sched = BatchScheduler(cfg, mesh, ServeConfig(max_len=128, batch=4),
-                               params, session=session)
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=128, batch=4, prefill_chunk=16),
+            params, session=session,
+        )
         for rid in range(10):
             prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
             sched.submit(prompt, request_id=rid, max_new=8)
@@ -51,18 +57,21 @@ def main():
         while len(sched.completed) < 10 and steps < 200:
             sched.step()
             steps += 1
-        sched.drain()  # flush any deferred token readbacks
+        sched.drain()  # finish partial prefills + flush deferred readbacks
 
     run = session.finalize("results/serve_batch")
-    print(f"completed {len(sched.completed)} requests in {steps} decode steps")
+    print(f"completed {len(sched.completed)} requests in {steps} ticks "
+          f"({sched.stats['decode_steps']} decode steps, "
+          f"{sched.stats['prefill_chunks']} prefill chunks)")
     for req in sched.completed[:3]:
         print(f"  request {req['id']}: generated {req['generated']}")
     if run is None:
         print("monitoring disabled by environment; no run record")
         return
-    reg = run.regions["decode"]
-    print(f"decode region: {reg.measurements.num_steps} steps, "
-          f"dispatch efficiency {reg.pop.get('dispatch_efficiency', 0):.3f}")
+    for name in ("prefill", "decode"):
+        reg = run.regions[name]
+        print(f"{name} region: {reg.measurements.num_steps} steps, "
+              f"dispatch efficiency {reg.pop.get('dispatch_efficiency', 0):.3f}")
     print(f"run record: {session.last_record_path}")
 
 

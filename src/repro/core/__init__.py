@@ -1,22 +1,25 @@
 """repro.core — TALP-Pages for JAX: the paper's contribution.
 
 Public API:
-  TalpMonitor / MonitorConfig   on-the-fly POP factor collection (TALP)
+  MonitorConfig                 on-the-fly POP collection knobs (TALP)
   StepProfile                   compiled-step static counters (PAPI analogue)
   RunRecord / ResourceConfig    the JSON artifact schema
   build_table / render_text     scaling-efficiency tables
   generate_report               static HTML report (TALP-Pages)
   scan / merge_history          CI folder handling
-  TraceRecorder / post_process  the tracing baseline (Score-P/Extrae stand-in)
-"""
+  post_process                  trace post-processing (Score-P/Extrae stand-in)
 
-import warnings as _warnings
+Collectors (``TalpMonitor``, ``TraceRecorder``) are constructed exclusively
+behind ``repro.session.PerfSession`` — the one instrumentation surface. The
+one-release deprecation aliases here were removed after PR 3; select a
+backend via ``SessionConfig(backend="monitor"|"tracer")`` or ``TALP_ENABLE=1
+TALP_BACKEND=...`` instead.
+"""
 
 from repro.core.factors import compute_pop, validate_pop
 from repro.core.folder import Experiment, git_metadata, merge_history, scan
 from repro.core.hardware import DEFAULT_TARGET, TPU_V5E, TPU_V5P, ChipSpec, get_target
 from repro.core.monitor import MonitorConfig
-from repro.core.monitor import TalpMonitor as _TalpMonitorImpl
 from repro.core.profile import StepProfile
 from repro.core.records import (
     GLOBAL_REGION,
@@ -32,38 +35,10 @@ from repro.core.regression import ComputationShift, Finding, detect, explain_com
 from repro.core.report import badge_svg, generate_report
 from repro.core.scaling import ScalingTable, build_table, latest_per_config, render_text
 from repro.core.timeseries import build_series
-from repro.core.tracer import TraceRecorder as _TraceRecorderImpl
 from repro.core.tracer import post_process, trace_storage_bytes
 
-
-def _deprecated(old: str) -> None:
-    _warnings.warn(
-        f"constructing {old} directly is deprecated; go through "
-        "repro.session.PerfSession (backend='monitor'|'tracer') — the one "
-        "instrumentation surface. Direct construction will be removed next "
-        "release.",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-class TalpMonitor(_TalpMonitorImpl):
-    """Deprecated alias kept for one release; use repro.session.PerfSession."""
-
-    def __init__(self, *args, **kw):
-        _deprecated("repro.core.TalpMonitor")
-        super().__init__(*args, **kw)
-
-
-class TraceRecorder(_TraceRecorderImpl):
-    """Deprecated alias kept for one release; use repro.session.PerfSession."""
-
-    def __init__(self, *args, **kw):
-        _deprecated("repro.core.TraceRecorder")
-        super().__init__(*args, **kw)
-
 __all__ = [
-    "TalpMonitor", "MonitorConfig", "StepProfile", "RunRecord", "RegionRecord",
+    "MonitorConfig", "StepProfile", "RunRecord", "RegionRecord",
     "RegionCounters", "RegionMeasurements", "ComputationCounters",
     "ResourceConfig", "GLOBAL_REGION", "SCHEMA_VERSION",
     "ComputationShift", "Finding", "detect", "explain_computations",
@@ -71,5 +46,5 @@ __all__ = [
     "compute_pop", "validate_pop", "build_table", "render_text", "ScalingTable",
     "latest_per_config", "build_series", "generate_report", "badge_svg",
     "scan", "merge_history", "git_metadata", "Experiment",
-    "TraceRecorder", "post_process", "trace_storage_bytes",
+    "post_process", "trace_storage_bytes",
 ]

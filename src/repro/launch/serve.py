@@ -1,7 +1,8 @@
-"""Serving launcher: continuous-batching decode with monitoring.
+"""Serving launcher: continuous-batching decode with chunked prefill-on-
+attach overlapped with in-flight decode, and monitoring of both phases.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --smoke --requests 8 --max-new 8 --talp-out talp/serve
+        --smoke --requests 8 --max-new 8 --prefill-chunk 16 --talp-out talp/serve
 """
 
 from __future__ import annotations
@@ -17,6 +18,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prefill token budget per scheduler tick")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="stop-the-world prefill on attach (A/B baseline)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire requests early on this token id")
     ap.add_argument("--talp-out", default="")
     args = ap.parse_args(argv)
 
@@ -46,7 +53,10 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(0)
     with compat.use_mesh(mesh), session:
         sched = BatchScheduler(
-            cfg, mesh, ServeConfig(max_len=args.max_len, batch=args.batch),
+            cfg, mesh,
+            ServeConfig(max_len=args.max_len, batch=args.batch,
+                        prefill_chunk=args.prefill_chunk,
+                        overlap=not args.no_overlap, eos_id=args.eos_id),
             params, session=session,
         )
         for rid in range(args.requests):
@@ -58,7 +68,8 @@ def main(argv=None) -> int:
             steps += 1
         sched.drain()
     print(f"[serve] completed {len(sched.completed)}/{args.requests} requests "
-          f"in {steps} decode steps")
+          f"in {steps} ticks ({sched.stats['decode_steps']} decode steps, "
+          f"{sched.stats['prefill_chunks']} prefill chunks)")
     session.finalize(args.talp_out or None)
     if session.last_record_path:
         print(f"[serve] TALP record: {session.last_record_path}")

@@ -112,11 +112,17 @@ def flash_attention(
     """Online-softmax chunked attention.
 
     q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D); GQA via Hq = G*Hkv.
+    ``kv_len``: () or (B,) valid key length (keys at positions >= kv_len are
+    masked — the chunked-prefill path attends a prompt chunk against the
+    partially written KV cache this way).
     ``causal_skip`` bounds the kv scan per q-chunk (skips fully-future
     blocks) — a beyond-paper compute optimization toggled by the perf pass.
     Returns (B,Sq,Hq,D) in q.dtype.
     """
     B, Sq, Hq, D = q.shape
+    if kv_len is not None:
+        # normalize to broadcast against the (B,1,1,qc,kc) block mask
+        kv_len = jnp.asarray(kv_len).reshape(-1, 1, 1, 1, 1)
     _, Sk, Hkv, _ = k.shape
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
@@ -311,9 +317,19 @@ def attention_block(
     params, x, cfg, *,
     positions, lc: LogicalConstraints = NULL_CONSTRAINTS,
     causal=True, window=None, cache=None, cache_len=None,
+    seq_mask=None, cache_attend=False,
 ):
     """Returns (out, new_cache). ``cache``: dict(k=(B,Smax,Hkv,D), v=...) or
-    None for full-sequence (training / prefill without cache) mode."""
+    None for full-sequence (training / prefill without cache) mode.
+
+    ``positions`` is (B,S) and doubles as the per-slot cache write index —
+    each batch row writes its k/v at its own offsets (continuous batching:
+    slots sit at different sequence positions). ``seq_mask`` (B,S) bool
+    suppresses cache writes for masked entries (padding in a prefill chunk,
+    inactive slots in a batched decode step). ``cache_attend`` switches the
+    S>1 path from in-chunk attention (full prefill from position 0) to
+    attending against the whole written cache (chunked prefill continuing
+    at positions[:,0] > 0 — earlier chunks live in the cache)."""
     from repro.layers.norms import rmsnorm
 
     B, S, _ = x.shape
@@ -339,13 +355,23 @@ def attention_block(
 
     new_cache = None
     if cache is not None:
-        # write current k/v at positions, then attend against the cache
+        # write current k/v at each row's own positions, then attend against
+        # the cache. A masked (B,S) scatter replaces the old scalar
+        # dynamic_update_slice: slots at different positions write to
+        # different offsets in ONE op, and masked entries (padding /
+        # inactive decode slots) are dropped instead of scribbling on live
+        # cache lines (write index pushed out of bounds + mode="drop").
+        Smax = cache["k"].shape[1]
         pos0 = positions[:, 0] if positions.ndim == 2 else positions
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), _scalar(pos0), axis=1
-        ) if S > 0 else cache["k"]
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), _scalar(pos0), axis=1
+        write_pos = positions
+        if seq_mask is not None:
+            write_pos = jnp.where(seq_mask, positions, Smax)
+        b_idx = jnp.arange(B)[:, None]
+        kc = cache["k"].at[b_idx, write_pos].set(
+            k.astype(cache["k"].dtype), mode="drop"
+        )
+        vc = cache["v"].at[b_idx, write_pos].set(
+            v.astype(cache["v"].dtype), mode="drop"
         )
         new_cache = {"k": kc, "v": vc}
         if S == 1:
@@ -353,7 +379,19 @@ def attention_block(
                 q, kc, vc, q_position=pos0, cache_len=cache_len,
                 window=window, softcap=cfg.attn_softcap,
             )
-        else:  # prefill with cache write
+        elif cache_attend:
+            # chunked prefill: this chunk's queries see every cache line
+            # written so far (earlier chunks + this one), bounded by
+            # cache_len, under the usual causal/window visibility
+            k_positions = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+            o = flash_attention(
+                q, kc, vc, q_positions=positions, k_positions=k_positions,
+                causal=causal, window=window, softcap=cfg.attn_softcap,
+                kv_len=cache_len,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                causal_skip=False,
+            )
+        else:  # full prefill from position 0: in-chunk attention
             o = flash_attention(
                 q, k, v, q_positions=positions,
                 k_positions=positions, causal=causal, window=window,
@@ -371,8 +409,3 @@ def attention_block(
     o = lc(o, "batch", "seq_q", "heads", None)
     out = o.reshape(B, S, hq * hd) @ params["wo"].astype(compute)
     return out, new_cache
-
-
-def _scalar(x):
-    x = jnp.asarray(x)
-    return x.reshape(()) if x.ndim == 0 else x.reshape(-1)[0]

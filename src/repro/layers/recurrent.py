@@ -35,9 +35,15 @@ def _segsum(x):
     return jnp.where(mask, out, -jnp.inf)
 
 
-def causal_conv1d(x, w, b=None, state=None):
+def causal_conv1d(x, w, b=None, state=None, valid_len=None):
     """Depthwise causal conv. x: (B,S,C), w: (K,C). ``state``: (B,K-1,C)
-    carry for decode; returns (y, new_state)."""
+    carry for decode; returns (y, new_state).
+
+    ``valid_len``: (B,) number of valid leading positions per row (the rest
+    of ``x`` is padding). The carried-out state then ends at each row's own
+    valid end instead of the padded end, so a padded prefill chunk leaves
+    exactly the state a tight chunk would have left (valid_len == 0 keeps
+    the incoming state untouched — frozen inactive decode slots)."""
     K = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
@@ -46,7 +52,15 @@ def causal_conv1d(x, w, b=None, state=None):
     y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
     if b is not None:
         y = y + b[None, None, :]
-    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    if K <= 1:
+        return y, None
+    if valid_len is None:
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        # last K-1 positions of each row's valid history: xp[l : l+K-1]
+        # (xp = [K-1 carried/padded] + [x], so valid history ends at K-1+l)
+        idx = valid_len[:, None] + jnp.arange(K - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return y, new_state
 
 
@@ -136,9 +150,15 @@ def _ssd_chunked(x, dt, A, B, C, chunk, init_state=None):
 
 
 def mamba2_block(
-    params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None
+    params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None,
+    seq_mask=None,
 ):
-    """Returns (out, new_cache). cache: {"conv": (B,K-1,C), "ssm": (B,h,p,n)}."""
+    """Returns (out, new_cache). cache: {"conv": (B,K-1,C), "ssm": (B,h,p,n)}.
+
+    ``seq_mask`` (B,S) bool marks valid positions; masked positions advance
+    neither the conv nor the SSM state (dt is zeroed, so the decay is
+    exp(0)=1 and the input contribution 0 — exact state freeze). Used by
+    chunked prefill padding and inactive continuous-batching decode slots."""
     s = cfg.ssm
     Bsz, S, d = x.shape
     d_inner = s.d_inner(d)
@@ -155,6 +175,7 @@ def mamba2_block(
     xconv, new_conv = causal_conv1d(
         xconv_in, params["conv_w"].astype(compute),
         params["conv_b"].astype(compute), state=conv_state,
+        valid_len=None if seq_mask is None else jnp.sum(seq_mask, axis=1),
     )
     xconv = jax.nn.silu(xconv)
     xs, B_, C_ = jnp.split(xconv, [d_inner, d_inner + g * n], axis=-1)
@@ -164,6 +185,8 @@ def mamba2_block(
     dt = jax.nn.softplus(
         dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
     )  # (B,S,h)
+    if seq_mask is not None:
+        dt = dt * seq_mask[..., None]
     A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (h,) negative
 
     if cache is not None and S == 1:
@@ -317,7 +340,13 @@ def _mlstm_chunked(q, k, v, log_i, log_f, chunk, init=None):
     return y, (C, n, m)
 
 
-def mlstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None):
+def mlstm_block(
+    params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None,
+    seq_mask=None,
+):
+    """``seq_mask`` (B,S): masked positions get input gate -inf and forget
+    gate 0 (log-space), so (C, n, m) pass through unchanged — exact state
+    freeze for chunk padding / inactive decode slots."""
     xl = cfg.xlstm
     B, S, d = x.shape
     di = xl.d_inner(d)
@@ -331,6 +360,7 @@ def mlstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache
     xc, new_conv = causal_conv1d(
         xm, params["conv_w"].astype(compute), params["conv_b"].astype(compute),
         state=conv_state,
+        valid_len=None if seq_mask is None else jnp.sum(seq_mask, axis=1),
     )
     xc = jax.nn.silu(xc)
     q = (xc @ params["wq"].astype(compute)).reshape(B, S, h, p)
@@ -340,6 +370,10 @@ def mlstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache
     gi, gf = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,h)
     log_i = gi + params["b_i"].astype(jnp.float32)
     log_f = jax.nn.log_sigmoid(gf + params["b_f"].astype(jnp.float32))
+    if seq_mask is not None:
+        m3 = seq_mask[..., None]
+        log_i = jnp.where(m3, log_i, -1e30)  # no input at masked positions
+        log_f = jnp.where(m3, log_f, 0.0)    # and no decay: state passes through
 
     if cache is not None and S == 1:
         C, n, m = cache["C"], cache["n"], cache["m"]
@@ -355,6 +389,13 @@ def mlstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache
         num = jnp.einsum("bhp,bhpo->bho", qf, C)
         den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n)), jnp.exp(-m_new))
         y = (num / den[..., None])[:, None]                  # (B,1,h,p)
+        if seq_mask is not None:
+            # gate masking alone leaks into C/n when m is still at its
+            # -1e30 init (exp(li - m_new) == 1 there): freeze explicitly
+            keep = seq_mask[:, 0]
+            C = jnp.where(keep[:, None, None, None], C, cache["C"])
+            n = jnp.where(keep[:, None, None], n, cache["n"])
+            m_new = jnp.where(keep, m_new, cache["m"])
         new_state = (C, n, m_new)
     else:
         init = (cache["C"], cache["n"], cache["m"]) if cache is not None else None
@@ -429,7 +470,12 @@ def slstm_cell(carry, w, h_heads, d_head):
     return (c, n, h_new, m_new)
 
 
-def slstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None):
+def slstm_block(
+    params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache=None,
+    seq_mask=None,
+):
+    """``seq_mask`` (B,S): the cell carry passes through unchanged at masked
+    positions (chunk padding / inactive decode slots)."""
     B, S, d = x.shape
     nh = cfg.n_heads
     dh = d // nh
@@ -444,17 +490,29 @@ def slstm_block(params, x, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS, cache
 
     r = params["r"].astype(jnp.float32)
 
-    def step(carry, w_t):
+    def advance(carry, w_t):
         _, _, hprev, _ = carry
         rec = jnp.einsum("bhd,hdk->bhk", hprev, r).reshape(B, 4 * d)
-        carry = slstm_cell(carry, w_t.astype(jnp.float32) + rec, nh, dh)
+        return slstm_cell(carry, w_t.astype(jnp.float32) + rec, nh, dh)
+
+    def step(carry, inp):
+        if seq_mask is None:
+            carry = advance(carry, inp)
+        else:
+            w_t, keep = inp
+            new = advance(carry, w_t)
+            keep = keep[:, None, None]
+            carry = tuple(jnp.where(keep, nw, od) for nw, od in zip(new, carry))
         return carry, carry[2]
 
+    xs = w_all.transpose(1, 0, 2)
+    if seq_mask is not None:
+        xs = (xs, seq_mask.transpose(1, 0))
     if S == 1 and cache is not None:
-        carry, h_seq = step(carry0, w_all[:, 0])
+        carry, h_seq = step(carry0, jax.tree_util.tree_map(lambda t: t[0], xs))
         ys = h_seq[:, None]                                  # (B,1,nh,dh)
     else:
-        carry, hs = jax.lax.scan(step, carry0, w_all.transpose(1, 0, 2))
+        carry, hs = jax.lax.scan(step, carry0, xs)
         ys = hs.transpose(1, 0, 2, 3)                        # (B,S,nh,dh)
 
     from repro.layers.norms import rmsnorm

@@ -10,7 +10,8 @@ Entry points:
   forward(params, batch, cfg, ...)   logits / loss+aux (train)
   init_cache(cfg, batch, max_len)    decode cache pytree
   prefill(params, batch, cfg, ...)   cache fill + last-position logits
-  decode_step(params, batch, ...)    one-token step
+  prefill_chunk(params, batch, ...)  incremental prefill at per-slot offsets
+  decode_step(params, batch, ...)    one-token step (per-slot positions)
 """
 
 from __future__ import annotations
@@ -92,9 +93,15 @@ def model_params(cfg) -> dict:
 
 
 def _apply_slot(
-    slot_params, kind: str, x, cfg, *, positions, lc, cache=None, cache_len=None
+    slot_params, kind: str, x, cfg, *, positions, lc, cache=None, cache_len=None,
+    seq_mask=None, cache_attend=False,
 ):
-    """One block of the pattern. Returns (x, new_cache, aux)."""
+    """One block of the pattern. Returns (x, new_cache, aux).
+
+    ``seq_mask`` (B,S) marks valid positions: masked positions neither write
+    the KV cache nor advance recurrent state (continuous batching: chunk
+    padding and inactive decode slots). ``cache_attend`` routes S>1 attention
+    against the written cache (chunked prefill) instead of in-chunk."""
     aux: dict[str, Any] = {}
     h = rmsnorm(
         x, slot_params["norm_in"]["scale"], cfg.norm_eps, cfg.zero_centered_norm
@@ -107,6 +114,7 @@ def _apply_slot(
             slot_params["attn"], h, cfg, positions=positions, lc=lc,
             causal=not cfg.encoder_only, window=window,
             cache=att_cache, cache_len=cache_len,
+            seq_mask=seq_mask, cache_attend=cache_attend,
         )
         # constrain BEFORE the residual add: the TP partial sums then lower
         # to reduce-scatter onto the seq-sharded residual instead of a full
@@ -127,7 +135,8 @@ def _apply_slot(
             new_cache = {"attn": att_new}
     elif kind == "mamba2":
         o, mcache = R.mamba2_block(
-            slot_params["mamba"], h, cfg, lc=lc, cache=cache.get("mamba") if cache else None
+            slot_params["mamba"], h, cfg, lc=lc,
+            cache=cache.get("mamba") if cache else None, seq_mask=seq_mask,
         )
         o = lc(o, "batch", "seq", None)
         x = x + o
@@ -136,7 +145,7 @@ def _apply_slot(
     elif kind == "mlstm":
         o, mcache = R.mlstm_block(
             slot_params["mlstm"], h, cfg, lc=lc,
-            cache=cache.get("mlstm") if cache else None,
+            cache=cache.get("mlstm") if cache else None, seq_mask=seq_mask,
         )
         x = x + o
         if mcache is not None:
@@ -144,7 +153,7 @@ def _apply_slot(
     elif kind == "slstm":
         o, scache = R.slstm_block(
             slot_params["slstm"], h, cfg, lc=lc,
-            cache=cache.get("slstm") if cache else None,
+            cache=cache.get("slstm") if cache else None, seq_mask=seq_mask,
         )
         x = x + o
         h2 = rmsnorm(
@@ -169,7 +178,8 @@ def _remat(fn, cfg):
     return jax.checkpoint(fn)
 
 
-def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None):
+def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None,
+               seq_mask=None, cache_attend=False):
     """Scan pattern x repeats. caches: {slot_name: stacked cache} or None.
     Returns (x, new_caches, aux_totals)."""
     slot_names = list(params["slots"].keys())
@@ -185,6 +195,7 @@ def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None):
                 slot_rows[name], kind, x, cfg, positions=positions, lc=lc,
                 cache=cache_rows.get(name) if cache_rows else None,
                 cache_len=cache_len,
+                seq_mask=seq_mask, cache_attend=cache_attend,
             )
             if nc is not None:
                 new_cache_rows[name] = nc
@@ -371,19 +382,60 @@ def prefill(params, batch, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINT
     return logits[:, 0], new_caches
 
 
+def prefill_chunk(
+    params, batch, cfg, caches, start, length,
+    lc: LogicalConstraints = NULL_CONSTRAINTS,
+):
+    """One chunk of an incremental prefill: run ``batch["tokens"]`` (B,C)
+    through the stack as positions ``start .. start+length``, writing the
+    caches at each row's own offsets and attending against everything
+    written so far (earlier chunks included).
+
+    ``start``: () or (B,) position of the chunk's first token; ``length``:
+    () or (B,) valid tokens in the chunk — the rest is padding, which
+    neither writes the cache nor advances recurrent state, so a padded
+    chunk leaves exactly the state a tight chunk would have.
+    Returns (logits (B,V) at each row's LAST VALID position, new_caches) —
+    on the final chunk of a prompt those logits sample the first generated
+    token."""
+    x = _embed_inputs(params, batch, cfg, lc)
+    B, C, _ = x.shape
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+    offs = jnp.arange(C, dtype=jnp.int32)[None, :]
+    seq_mask = offs < length[:, None]
+    positions = start[:, None] + offs
+    x, new_caches, _ = _run_stack(
+        params, x, cfg, positions=positions, lc=lc, caches=caches,
+        cache_len=start + length, seq_mask=seq_mask, cache_attend=True,
+    )
+    x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    x_last = jnp.take_along_axis(
+        x, jnp.maximum(length - 1, 0)[:, None, None], axis=1
+    )  # (B,1,d)
+    logits = _logits(params, x_last, cfg, lc)
+    return logits[:, 0], new_caches
+
+
 def decode_step(
     params, tokens, pos, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINTS,
-    frontend=None,
+    frontend=None, active=None,
 ):
-    """One decode step. tokens: (B,1) int32; pos: scalar current position.
+    """One decode step. tokens: (B,1) int32; pos: () scalar or (B,) vector of
+    per-slot positions — continuous batching attaches requests mid-flight, so
+    every slot carries its own position (RoPE, cache write offset, visible
+    cache length all follow it). ``active``: optional (B,) bool; inactive
+    slots neither write the KV cache nor advance recurrent state.
     Returns (logits (B,V), new_caches)."""
     batch = {"tokens": tokens, "frontend": frontend}
     x = _embed_inputs(params, batch, cfg, lc)
     B = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (B, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
+    seq_mask = None if active is None else jnp.asarray(active).reshape(B, 1)
     x, new_caches, _ = _run_stack(
         params, x, cfg, positions=positions, lc=lc, caches=caches,
-        cache_len=pos + 1,
+        cache_len=pos + 1, seq_mask=seq_mask,
     )
     x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
     logits = _logits(params, x, cfg, lc)

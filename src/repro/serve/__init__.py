@@ -2,11 +2,14 @@ from repro.serve.serve import (
     ServeConfig,
     make_decode_step,
     make_prefill_step,
+    make_prefill_chunk_step,
+    make_serve_decode_step,
     serve_cache_pspecs,
     BatchScheduler,
 )
 
 __all__ = [
     "ServeConfig", "make_decode_step", "make_prefill_step",
+    "make_prefill_chunk_step", "make_serve_decode_step",
     "serve_cache_pspecs", "BatchScheduler",
 ]

@@ -10,10 +10,12 @@ over their head/inner dims.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
@@ -28,6 +30,20 @@ class ServeConfig:
     batch: int
     temperature: float = 1.0
     greedy: bool = True
+    # chunked prefill-on-attach: token budget (= chunk size) the scheduler
+    # spends on prefill per tick. With ``overlap=True`` (the default) chunks
+    # are dispatched asynchronously BETWEEN decode dispatches, so attaching a
+    # queued request never stalls the in-flight decode pipeline; overlap=False
+    # is the stop-the-world baseline (whole prompt prefilled synchronously on
+    # attach) kept for benchmarks/serve_throughput.py.
+    prefill_chunk: int = 32
+    overlap: bool = True
+    # early stop: retire a request when it emits ``eos_id``. EOS needs token
+    # *values* on the host, so pending readbacks are additionally flushed
+    # every ``eos_check_every`` ticks (bounded detection latency without
+    # paying one transfer per step).
+    eos_id: int | None = None
+    eos_check_every: int = 8
 
 
 def cache_pspec_tree(cfg, mesh, caches):
@@ -95,12 +111,63 @@ def make_decode_step(cfg, mesh):
     lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
 
     def decode_step(params, tokens, pos, caches):
-        """tokens: (B,1) int32; pos: () int32 current position."""
+        """tokens: (B,1) int32; pos: () int32 shared position, or (B,) int32
+        per-slot positions (continuous batching)."""
         logits, new_caches = T.decode_step(params, tokens, pos, cfg, caches, lc)
         next_tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
         return next_tok, new_caches
 
     return decode_step
+
+
+def make_serve_decode_step(cfg, mesh):
+    """Continuous-batching decode: per-slot positions + active mask.
+
+    Inactive slots (empty, or mid-prefill — their cache lines belong to the
+    concurrently dispatched prefill chunks) neither write the KV cache nor
+    advance recurrent state; their sampled tokens are garbage and ignored."""
+    lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+
+    def decode_step(params, tokens, pos, active, caches):
+        """tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool."""
+        logits, new_caches = T.decode_step(
+            params, tokens, pos, cfg, caches, lc, active=active
+        )
+        next_tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return decode_step
+
+
+def make_prefill_chunk_step(cfg, mesh):
+    """One chunk of one request's prompt into ONE slot's cache lines.
+
+    The slot's rows are sliced out of the stacked cache pytree, run through
+    ``T.prefill_chunk`` at batch 1, and scattered back — the other slots'
+    lines pass through untouched, which is what makes it safe to interleave
+    with in-flight decode dispatches."""
+    lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+
+    def chunk_step(params, tokens, start, length, slot, caches):
+        """tokens: (1,C) int32 (padded); start/length: (1,) int32;
+        slot: () int32; caches: full stacked tree. Returns
+        (next_tok (1,) — argmax at the last valid position, new_caches)."""
+        slot_caches = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), caches
+        )
+        logits, new_slot = T.prefill_chunk(
+            params, {"tokens": tokens}, cfg, slot_caches, start, length, lc
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_caches = jax.tree_util.tree_map(
+            lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
+                full, upd.astype(full.dtype), slot, axis=1
+            ),
+            caches, new_slot,
+        )
+        return next_tok, new_caches
+
+    return chunk_step
 
 
 def make_encoder_step(cfg, mesh):
@@ -119,23 +186,47 @@ def make_encoder_step(cfg, mesh):
 # ---------------------------------------------------------------------------
 
 
-class BatchScheduler:
-    """Greedy slot-based continuous batching: fixed B decode slots; finished
-    sequences are replaced by queued requests (prefill on attach).
+@functools.lru_cache(maxsize=None)
+def _serve_step_fns(cfg, mesh):
+    """Shared jitted (decode, prefill-chunk) pair per (cfg, mesh): scheduler
+    instances (restarts, A/B benchmark runs) reuse traces instead of paying
+    a fresh compile each."""
+    return (
+        jax.jit(make_serve_decode_step(cfg, mesh), donate_argnums=(4,)),
+        jax.jit(make_prefill_chunk_step(cfg, mesh), donate_argnums=(5,)),
+    )
 
-    Token readback is **deferred and batched**: a decode step only appends
-    the on-device token array to a pending list (keeping the dispatch
-    pipeline free of host round-trips), and one ``jax.device_get`` of the
-    whole pending batch runs when a request is about to complete (or on
-    ``drain()``). Completion is count-based (``max_new``), so the host never
-    needs token *values* mid-flight — N decode steps cost one transfer
-    instead of N.
+
+class BatchScheduler:
+    """Slot-based continuous batching with genuine chunked prefill-on-attach
+    overlapped with in-flight decode.
+
+    Every slot carries its own position (``pos`` is a (B,) vector): a request
+    attached mid-flight decodes at *its* sequence position, not the batch's.
+    Attaching runs a real prefill — the prompt is written into the slot's KV
+    cache in fixed ``prefill_chunk``-token chunks, ONE chunk dispatched per
+    tick *after* that tick's decode dispatch, so the decode pipeline never
+    waits on a prefill (``overlap=True``; ``overlap=False`` prefills the
+    whole prompt synchronously on attach — the stop-the-world baseline).
+    Decode and prefill commute on the cache: inactive/prefilling slots are
+    masked out of the decode step's cache writes and recurrent-state
+    advance, and a prefill chunk only touches its own slot's cache lines —
+    so the generated tokens are bitwise identical with overlap on or off.
+
+    Token readback is **deferred and batched**: decode steps and prefill
+    completions append on-device token arrays to a pending list, and one
+    ``jax.device_get`` of the whole pending batch runs when a request is
+    about to complete its ``max_new`` budget, every ``eos_check_every``
+    ticks when ``eos_id`` is set (EOS needs token values), or on
+    ``drain()``. Retirement is budget-based AND EOS-based (generated tokens
+    past an EOS are dropped at flush time).
 
     Monitoring goes through ``repro.session``: pass a ``PerfSession`` and
-    every decode dispatch is a visit of its ``decode`` region with the step
-    observed and the static StepProfile derived from the compiled decode
-    step; with no session (or a null backend) the scheduler runs fully
-    uninstrumented at zero cost.
+    every decode dispatch is a visit of its ``decode`` region and every
+    prefill chunk a visit of its ``prefill`` region, each with its own
+    derived StepProfile — the report shows prefill and decode factor
+    regressions separately. With no session (or a null backend) the
+    scheduler runs fully uninstrumented at zero cost.
     """
 
     def __init__(self, cfg, mesh, scfg: ServeConfig, params, session=None):
@@ -143,13 +234,23 @@ class BatchScheduler:
 
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
         self.params = params
+        # chunked recurrences re-chunk internally at ssm/xlstm chunk: a
+        # prefill chunk larger than that must tile it exactly
+        for inner in (cfg.ssm.chunk if cfg.ssm else None,
+                      cfg.xlstm.chunk if cfg.xlstm else None):
+            if inner and scfg.prefill_chunk > inner and scfg.prefill_chunk % inner:
+                raise ValueError(
+                    f"prefill_chunk={scfg.prefill_chunk} must be <= the "
+                    f"recurrent chunk {inner} or a multiple of it"
+                )
         # default: off, but env-activatable (TALP_ENABLE=1) like every other
         # entry point; the caller owns finalize() (also via self.session)
         self.session = session if session is not None else PerfSession(
             SessionConfig(app_name="serve", backend="null")
         )
+        decode_fn, prefill_fn = _serve_step_fns(cfg, mesh)
         self.decode = self.session.wrap_step(
-            jax.jit(make_decode_step(cfg, mesh), donate_argnums=(3,)),
+            decode_fn,
             region="decode",
             derive=True,
             num_devices=mesh.devices.size,
@@ -157,70 +258,212 @@ class BatchScheduler:
             # tuple would serialize the decode pipeline
             observe=lambda out: {"outputs": out[0]},
         )
+        self.prefill = self.session.wrap_step(
+            prefill_fn,
+            region="prefill",
+            derive=True,
+            num_devices=mesh.devices.size,
+            observe=lambda out: {"outputs": out[0]},
+        )
         self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
         self.tokens = jnp.zeros((scfg.batch, 1), jnp.int32)
         self.queue: list[dict] = []
-        self.active: list[dict | None] = [None] * scfg.batch
-        self.pos = 0
+        self.active: list[dict | None] = [None] * scfg.batch   # decoding slots
+        self.pos = np.zeros(scfg.batch, np.int32)              # per-slot position
         self.completed: list[dict] = []
-        # pending readbacks: (device tokens of one step, slot->request map
-        # at that step); flushed in a single device_get
+        # in-flight prefills: FIFO of {"req","slot","prompt","done"}
+        self._prefills: list[dict] = []
+        self._prefilling: list[dict | None] = [None] * scfg.batch
+        # next-token seeds (slot, device scalar) applied in ONE scatter/tick
+        self._seeds: list[tuple[int, Any]] = []
+        # pending readbacks: (device tokens (n,1), row->request map); flushed
+        # in a single device_get
         self._pending: list[tuple[Any, list[dict | None]]] = []
+        self.stats = {
+            "ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
+            "readbacks": 0,
+            # overlap accounting: "overlap_ticks" counts ticks where a
+            # prefill was in flight alongside >=1 decoding slot (proof the
+            # two phases actually co-existed); "decode_after_prefill_ticks"
+            # counts ticks whose decode dispatch only happened AFTER prefill
+            # work ran in the same tick — i.e. the decode pipeline waited on
+            # a prefill. The overlap guarantee benchmarks/serve_throughput.py
+            # asserts is overlap_ticks > 0 and decode_after_prefill_ticks
+            # == 0; the stop-the-world baseline trips the latter.
+            "overlap_ticks": 0, "decode_after_prefill_ticks": 0,
+        }
 
     def submit(self, prompt_tokens, request_id, max_new: int = 32) -> None:
+        prompt = list(prompt_tokens)
+        # cache writes past max_len would be silently dropped by the masked
+        # scatter (mode="drop") — garbage tokens with no error — so reject
+        # oversized requests at the door. The last decode writes position
+        # prompt_len + max_new - 2 (the final sampled token is never fed
+        # back), hence the -1 slack; an empty prompt gets no prefill token,
+        # so all max_new tokens come from decode writes at 0..max_new-1.
+        need = len(prompt) + max(max_new - 1, 0) if prompt else max_new
+        if need > self.scfg.max_len:
+            raise ValueError(
+                f"request {request_id!r} needs {need} cache positions "
+                f"(prompt {len(prompt)}, max_new {max_new}) but "
+                f"max_len={self.scfg.max_len}"
+            )
         self.queue.append(
-            {"id": request_id, "prompt": prompt_tokens, "max_new": max_new,
-             "generated": [], "_pending": 0}
+            {"id": request_id, "prompt": prompt,
+             "max_new": max_new, "generated": [], "_pending": 0}
         )
+
+    # -- attach / prefill ------------------------------------------------
+
+    def _free(self, slot: int) -> bool:
+        return self.active[slot] is None and self._prefilling[slot] is None
 
     def _attach(self) -> None:
         for slot in range(self.scfg.batch):
-            if self.active[slot] is None and self.queue:
+            if self._free(slot) and self.queue:
                 req = self.queue.pop(0)
-                self.active[slot] = req
-                tok = req["prompt"][-1] if len(req["prompt"]) else 0
-                self.tokens = self.tokens.at[slot, 0].set(int(tok))
+                self.pos[slot] = 0
+                if not req["prompt"]:
+                    # nothing to prefill: decode from an empty cache off a
+                    # constant BOS-like seed
+                    self._seeds.append((slot, 0))
+                    self.active[slot] = req
+                else:
+                    task = {"req": req, "slot": slot, "done": 0,
+                            "prompt": np.asarray(req["prompt"], np.int32)}
+                    self._prefilling[slot] = task
+                    self._prefills.append(task)
+
+    def _dispatch_prefill_chunk(self) -> None:
+        """Dispatch one ``prefill_chunk``-token chunk for the oldest
+        in-flight prefill (asynchronous: no host sync here)."""
+        task = self._prefills[0]
+        C = self.scfg.prefill_chunk
+        prompt, start = task["prompt"], task["done"]
+        L = min(C, len(prompt) - start)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :L] = prompt[start : start + L]
+        next_tok, self.caches = self.prefill(
+            self.params, jnp.asarray(chunk),
+            jnp.asarray([start], jnp.int32), jnp.asarray([L], jnp.int32),
+            jnp.asarray(task["slot"], jnp.int32), self.caches,
+        )
+        task["done"] = start + L
+        self.stats["prefill_chunks"] += 1
+        if task["done"] >= len(prompt):
+            # prefill complete: next_tok is the request's FIRST generated
+            # token — it joins the deferred readback like any decode output,
+            # and seeds the slot's decode input (device-side, next tick)
+            slot, req = task["slot"], task["req"]
+            self._prefills.pop(0)
+            self._prefilling[slot] = None
+            self.active[slot] = req
+            self.pos[slot] = len(prompt)
+            req["_pending"] += 1
+            self._pending.append((next_tok.reshape(1, 1), [req]))
+            self._seeds.append((slot, next_tok[0]))
+
+    def _apply_seeds(self) -> None:
+        """All newly seeded slots in ONE vectorized device-side scatter —
+        no per-slot host round-trips."""
+        if not self._seeds:
+            return
+        seeds, self._seeds = self._seeds, []
+        slots = jnp.asarray([s for s, _ in seeds], jnp.int32)
+        toks = jnp.stack(
+            [jnp.asarray(t, jnp.int32).reshape(()) for _, t in seeds]
+        )
+        self.tokens = self.tokens.at[slots, 0].set(toks)
+
+    # -- readback --------------------------------------------------------
 
     def _flush(self) -> None:
-        """Materialize all pending tokens in ONE host transfer and retire
-        any requests that reached their budget."""
+        """Materialize all pending tokens in ONE host transfer; retire
+        requests that hit their budget or emitted EOS."""
         if not self._pending:
             return
         pending, self._pending = self._pending, []
         host = jax.device_get([toks for toks, _ in pending])  # single transfer
-        for toks, (_, slots) in zip(host, pending):
-            for slot, req in enumerate(slots):
+        self.stats["readbacks"] += 1
+        for toks, (_, reqmap) in zip(host, pending):
+            for row, req in enumerate(reqmap):
                 if req is None:
                     continue
-                req["generated"].append(int(toks[slot, 0]))
+                req["generated"].append(int(toks[row, 0]))
                 req["_pending"] -= 1
+        eos = self.scfg.eos_id
         for slot, req in enumerate(self.active):
-            if req is not None and len(req["generated"]) >= req["max_new"]:
+            if req is None:
+                continue
+            done = len(req["generated"]) >= req["max_new"]
+            if eos is not None and eos in req["generated"]:
+                # early stop: drop anything decoded past the EOS between
+                # flush boundaries
+                req["generated"] = req["generated"][: req["generated"].index(eos) + 1]
+                done = True
+            if done:
                 self.completed.append(req)
                 self.active[slot] = None
 
     def drain(self) -> None:
-        """Flush outstanding readbacks (end of serving loop / inspection)."""
+        """Finish in-flight (partial) prefills and flush outstanding
+        readbacks (end of serving loop / inspection)."""
+        with compat.use_mesh(self.mesh):
+            while self._prefills:
+                self._dispatch_prefill_chunk()
+            self._apply_seeds()
         self._flush()
 
+    # -- the tick --------------------------------------------------------
+
     def step(self) -> int:
-        """One decode step for the whole batch; returns #active."""
+        """One scheduler tick: decode dispatch for all decoding slots, then
+        at most one prefill chunk dispatch. Returns #busy slots."""
+        self.stats["ticks"] += 1
         self._attach()
-        if all(a is None for a in self.active):
-            return 0
+        chunks_at_tick_start = self.stats["prefill_chunks"]
         with compat.use_mesh(self.mesh):
-            self.tokens, self.caches = self.decode(
-                self.params, self.tokens, jnp.asarray(self.pos, jnp.int32), self.caches
-            )
-        self.pos += 1
-        self._pending.append((self.tokens, list(self.active)))
-        flush_due = False
-        for req in self.active:
-            if req is None:
-                continue
-            req["_pending"] += 1
-            if len(req["generated"]) + req["_pending"] >= req["max_new"]:
-                flush_due = True
+            if not self.scfg.overlap:
+                # stop-the-world baseline: complete every pending prefill
+                # before this tick's decode may proceed
+                while self._prefills:
+                    self._dispatch_prefill_chunk()
+                if self._seeds:
+                    self._apply_seeds()
+                    jax.block_until_ready(self.tokens)
+            else:
+                self._apply_seeds()  # seeds collected since last tick
+            decoding = list(self.active)
+            if bool(self._prefills) and any(r is not None for r in decoding):
+                self.stats["overlap_ticks"] += 1
+            if any(r is not None for r in decoding):
+                active = np.asarray([r is not None for r in decoding])
+                self.tokens, self.caches = self.decode(
+                    self.params, self.tokens, jnp.asarray(self.pos),
+                    jnp.asarray(active), self.caches,
+                )
+                self.stats["decode_steps"] += 1
+                if self.stats["prefill_chunks"] > chunks_at_tick_start:
+                    # prefill work ran before this tick's decode dispatch:
+                    # the decode pipeline waited on it
+                    self.stats["decode_after_prefill_ticks"] += 1
+                self.pos[active] += 1
+                self._pending.append((self.tokens, decoding))
+                for req in decoding:
+                    if req is not None:
+                        req["_pending"] += 1
+            if self.scfg.overlap and self._prefills:
+                self._dispatch_prefill_chunk()
+        flush_due = any(
+            req is not None
+            and len(req["generated"]) + req["_pending"] >= req["max_new"]
+            for req in self.active
+        )
+        if (self.scfg.eos_id is not None and self._pending
+                and self.stats["ticks"] % self.scfg.eos_check_every == 0):
+            flush_due = True
         if flush_due:
             self._flush()
-        return sum(1 for req in self.active if req is not None)
+        return sum(
+            1 for slot in range(self.scfg.batch) if not self._free(slot)
+        )

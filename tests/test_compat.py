@@ -239,20 +239,21 @@ def test_no_version_gated_jax_access_outside_compat():
 
 
 def test_collectors_constructed_only_behind_the_session_facade():
-    """Production code must reach instrumentation through PerfSession; the
-    concrete ``TalpMonitor``/``TraceRecorder`` constructors are private to
-    the session module (plus their defining modules and the one-release
-    deprecation shims in repro.core). Tests may exercise the legacy path."""
+    """All code — production AND tests — reaches instrumentation through
+    PerfSession; the concrete ``TalpMonitor``/``TraceRecorder`` constructors
+    are private to the session module and their defining modules. The
+    one-release deprecation shims in ``repro.core`` are gone (PR 3's window
+    ended), so the former tests-may-exercise-the-legacy-path carve-out is
+    gone with them."""
     root = pathlib.Path(__file__).resolve().parent.parent
     construct = re.compile(r"\b(?:TalpMonitor|TraceRecorder)\s*\(")
     allowed = {
         "src/repro/session.py",       # the facade's backends
         "src/repro/core/monitor.py",  # the implementations themselves
         "src/repro/core/tracer.py",
-        "src/repro/core/__init__.py",  # deprecation shims (one release)
     }
     offenders = []
-    for sub in ("src", "benchmarks", "examples"):
+    for sub in ("src", "benchmarks", "examples", "tests"):
         for p in (root / sub).rglob("*.py"):
             rel = str(p.relative_to(root))
             if rel in allowed:

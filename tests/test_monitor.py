@@ -1,116 +1,113 @@
-"""TalpMonitor: on-the-fly accumulation semantics."""
-
-import time
+"""Monitor backend: on-the-fly accumulation semantics, driven through the
+``repro.session`` facade (the only supported construction path since the
+legacy ``repro.core.TalpMonitor`` alias was removed)."""
 
 import numpy as np
 import pytest
 
-from repro.core import (
-    GLOBAL_REGION,
-    MonitorConfig,
-    ResourceConfig,
-    StepProfile,
-    TalpMonitor,
-    validate_pop,
-)
+from repro.core import GLOBAL_REGION, ResourceConfig, StepProfile, validate_pop
+from repro.session import PerfSession, SessionConfig
 
 
-def clocked_monitor(**kw):
+def clocked_session(resources=None, **kw):
     t = [0.0]
 
     def clock():
         return t[0]
 
-    mon = TalpMonitor(
-        MonitorConfig(app_name="t", clock=clock, sync_regions=False, **kw),
-        ResourceConfig(num_hosts=2, devices_per_host=4),
+    ses = PerfSession(
+        SessionConfig(app_name="t", backend="monitor", clock=clock,
+                      sync_regions=False, respect_env=False, **kw),
+        resources or ResourceConfig(num_hosts=2, devices_per_host=4),
     )
-    return mon, t
+    return ses, t
 
 
 def test_global_region_implicit_and_elapsed():
-    mon, t = clocked_monitor()
-    mon.start()
+    ses, t = clocked_session()
+    ses.start()
     t[0] = 5.0
-    mon.stop()
-    run = mon.finalize()
+    ses.stop()
+    run = ses.finalize()
     assert run.regions[GLOBAL_REGION].measurements.elapsed_s == 5.0
     assert run.regions[GLOBAL_REGION].measurements.num_visits == 1
 
 
 def test_region_accumulates_over_visits():
-    mon, t = clocked_monitor()
-    mon.start()
+    ses, t = clocked_session()
+    ses.start()
     for _ in range(3):
-        with mon.region("timestep"):
+        with ses.region("timestep"):
             t[0] += 2.0
         t[0] += 1.0
-    run_region = mon.finalize().regions["timestep"]
+    run_region = ses.finalize().regions["timestep"]
     assert run_region.measurements.elapsed_s == pytest.approx(6.0)
     assert run_region.measurements.num_visits == 3
 
 
 def test_nested_regions_both_counted():
-    mon, t = clocked_monitor()
-    mon.start()
-    with mon.region("outer"):
+    ses, t = clocked_session()
+    ses.start()
+    with ses.region("outer"):
         t[0] += 1.0
-        with mon.region("inner"):
+        with ses.region("inner"):
             t[0] += 2.0
         t[0] += 1.0
-    run = mon.finalize()
+    run = ses.finalize()
     assert run.regions["outer"].measurements.elapsed_s == pytest.approx(4.0)
     assert run.regions["inner"].measurements.elapsed_s == pytest.approx(2.0)
 
 
 def test_observe_step_counts_and_device_time():
-    mon, t = clocked_monitor()
-    mon.start()
-    with mon.region("step"):
+    ses, t = clocked_session()
+    ses.start()
+    with ses.region("step"):
         for _ in range(4):
             t[0] += 0.5  # device work
-            mon.observe_step()
+            ses.observe_step()
             t[0] += 0.25  # host-only gap
-            mon.mark_device()
-    m = mon.finalize().regions["step"].measurements
+            ses.mark_device()
+    m = ses.finalize().regions["step"].measurements
     assert m.num_steps == 4
     assert m.device_time_s == pytest.approx(2.0)
     assert m.elapsed_s == pytest.approx(3.0)
 
 
 def test_lb_accumulators_sample_every_step_when_configured():
-    mon, t = clocked_monitor(lb_sample_every=1)
-    mon.start()
-    with mon.region("step"):
-        mon.observe_step(tokens_per_shard=[100, 50], expert_load=[3, 1, 0, 0])
-        mon.observe_step(tokens_per_shard=[100, 100])
-    m = mon.finalize().regions["step"].measurements
+    ses, t = clocked_session(lb_sample_every=1)
+    ses.start()
+    with ses.region("step"):
+        ses.observe_step(tokens_per_shard=[100, 50], expert_load=[3, 1, 0, 0])
+        ses.observe_step(tokens_per_shard=[100, 100])
+    m = ses.finalize().regions["step"].measurements
     assert m.data_lb == pytest.approx((0.75 + 1.0) / 2)
     assert m.expert_lb == pytest.approx(1.0 / 3)
 
 
 def test_host_times_split_in_pod_inter_pod():
-    mon, t = clocked_monitor(lb_sample_every=1)
-    mon.resources = ResourceConfig(num_hosts=4, devices_per_host=2, num_pods=2)
-    mon.start()
-    with mon.region("step"):
+    ses, t = clocked_session(
+        resources=ResourceConfig(num_hosts=4, devices_per_host=2, num_pods=2),
+        lb_sample_every=1,
+    )
+    ses.start()
+    with ses.region("step"):
         # pods: [1.0, 1.0] and [1.0, 2.0] -> in-pod mean(1, 0.75), inter 2/3...
-        mon.observe_step(host_times=[1.0, 1.0, 1.0, 2.0], pod_size=2)
-    m = mon.finalize().regions["step"].measurements
+        ses.observe_step(host_times=[1.0, 1.0, 1.0, 2.0], pod_size=2)
+    m = ses.finalize().regions["step"].measurements
     assert m.in_pod_lb == pytest.approx((1.0 + 0.75) / 2)
     assert m.inter_pod_lb == pytest.approx(((1.0 + 2.0) / 2) / 2.0)
 
 
 def test_static_counters_scale_with_steps():
-    mon, t = clocked_monitor()
+    ses, t = clocked_session()
     prof = StepProfile(num_devices=8, flops=100.0, hbm_bytes=10.0,
                        collective_bytes_ici=1.0, model_flops=80.0)
-    mon.attach_static("step", prof)
-    mon.start()
-    with mon.region("step"):
+    ses.attach_static("step", prof)
+    ses.start()
+    with ses.region("step"):
         for _ in range(5):
-            mon.observe_step()
-    run = mon.finalize()
+            ses.observe_step()
+    run = ses.finalize()
     c = run.regions["step"].counters
     assert c.useful_flops == 500.0
     assert c.model_flops == 400.0
@@ -119,30 +116,29 @@ def test_static_counters_scale_with_steps():
 
 
 def test_finalized_pop_validates():
-    mon, t = clocked_monitor(lb_sample_every=1)
+    ses, t = clocked_session(lb_sample_every=1)
     prof = StepProfile(num_devices=8, flops=1e12, hbm_bytes=1e10,
                        collective_bytes_ici=1e8)
-    mon.attach_static("step", prof)
-    mon.start()
-    with mon.region("step"):
+    ses.attach_static("step", prof)
+    ses.start()
+    with ses.region("step"):
         t[0] += 1.0
-        mon.observe_step(tokens_per_shard=[5, 10])
-    for reg in mon.finalize().regions.values():
+        ses.observe_step(tokens_per_shard=[5, 10])
+    for reg in ses.finalize().regions.values():
         assert validate_pop(reg.pop) == []
 
 
 def test_monitor_overhead_is_o1_memory():
     """State size must not grow with steps (TALP's core property)."""
-    import sys
-
-    mon, t = clocked_monitor(lb_sample_every=1)
-    mon.start()
-    with mon.region("step"):
-        mon.observe_step(tokens_per_shard=[1, 2])
+    ses, t = clocked_session(lb_sample_every=1)
+    ses.start()
+    mon = ses.collector  # the monitor backend's accumulator state
+    with ses.region("step"):
+        ses.observe_step(tokens_per_shard=[1, 2])
     size_10 = len(mon._regions)
-    with mon.region("step"):
+    with ses.region("step"):
         for _ in range(1000):
-            mon.observe_step(tokens_per_shard=[1, 2])
+            ses.observe_step(tokens_per_shard=[1, 2])
     assert len(mon._regions) == size_10  # no per-step state
     st = mon._regions["step"]
     assert isinstance(st.data_lb.total, float)  # scalar accumulators only

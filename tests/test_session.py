@@ -317,18 +317,21 @@ def test_top_level_exports(monkeypatch):
     assert repro.session is session_mod
 
 
-def test_legacy_constructors_warn(tmp_path):
-    from repro.core import MonitorConfig, TalpMonitor, TraceRecorder
+def test_legacy_constructor_aliases_are_gone():
+    """The one-release deprecation window (PR 3) is over: ``repro.core`` no
+    longer exposes the collector constructors — PerfSession is the only way
+    to build one."""
+    import repro.core as core
 
-    with pytest.warns(DeprecationWarning, match="PerfSession"):
-        TalpMonitor(MonitorConfig())
-    with pytest.warns(DeprecationWarning, match="PerfSession"):
-        TraceRecorder(str(tmp_path / "tr"), ResourceConfig())
+    assert not hasattr(core, "TalpMonitor")
+    assert not hasattr(core, "TraceRecorder")
+    assert "TalpMonitor" not in core.__all__
+    assert "TraceRecorder" not in core.__all__
 
 
-def test_internal_paths_do_not_warn(tmp_path):
-    """The session backends construct the *implementation* classes — no
-    deprecation noise from the supported path."""
+def test_session_backends_do_not_warn(tmp_path):
+    """The session backends construct the implementation classes directly —
+    no deprecation noise from the supported path."""
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         ses, t = make_session("monitor")

@@ -1,26 +1,22 @@
 """Tracer baseline vs monitor agreement (paper Tables 6/7 cross-tool check)
-and report generation."""
+and report generation — all collection driven through ``repro.session``."""
 
 import json
 import os
-import time
 
 import numpy as np
 import pytest
 
 from repro.core import (
     GLOBAL_REGION,
-    MonitorConfig,
     ResourceConfig,
     StepProfile,
-    TalpMonitor,
-    TraceRecorder,
     generate_report,
-    post_process,
     scan,
     trace_storage_bytes,
 )
 from repro.core import factors as F
+from repro.session import PerfSession, SessionConfig
 
 
 RES = ResourceConfig(num_hosts=2, devices_per_host=4)
@@ -30,47 +26,38 @@ PROFILE = StepProfile(
 )
 
 
-def drive(recorder_like, steps=20, clock=None):
-    """Run the same synthetic workload through monitor or tracer."""
-    for s in range(steps):
+def clocked_session(backend, *, resources=RES, tmp_path=None, metadata=None, **kw):
+    clock = [0.0]
+    if backend == "tracer" and tmp_path is not None:
+        kw.setdefault("trace_dir", str(tmp_path))
+    ses = PerfSession(
+        SessionConfig(app_name="x", backend=backend, clock=lambda: clock[0],
+                      sync_regions=False, lb_sample_every=1,
+                      respect_env=False, **kw),
+        resources, metadata=metadata,
+    )
+    return ses, clock
+
+
+def drive(ses, clock, steps=20):
+    """Run the same synthetic workload through either backend."""
+    for _ in range(steps):
         clock[0] += 0.01  # device work
-        if isinstance(recorder_like, TalpMonitor):
-            recorder_like.observe_step(
-                tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0]
-            )
-        else:
-            recorder_like.record_step(
-                tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0]
-            )
+        ses.observe_step(tokens_per_shard=[100, 90], expert_load=[5, 3, 2, 0])
 
 
 def test_monitor_and_tracer_agree_on_factors(tmp_path):
-    clock = [0.0]
-    tick = lambda: clock[0]
+    runs = {}
+    for backend in ("monitor", "tracer"):
+        ses, clock = clocked_session(backend, tmp_path=tmp_path / "trace")
+        ses.attach_static("timestep", PROFILE)
+        ses.start()
+        with ses.region("timestep"):
+            drive(ses, clock)
+        runs[backend] = ses.finalize()
 
-    mon = TalpMonitor(
-        MonitorConfig(app_name="x", clock=tick, sync_regions=False,
-                      lb_sample_every=1),
-        RES,
-    )
-    mon.attach_static("timestep", PROFILE)
-    mon.start()
-    with mon.region("timestep"):
-        drive(mon, clock=clock)
-    run_mon = mon.finalize()
-
-    clock2 = [0.0]
-    tracer = TraceRecorder(str(tmp_path / "trace"), RES, app_name="x",
-                           clock=lambda: clock2[0])
-    tracer.attach_static("timestep", PROFILE)
-    tracer.region_enter("timestep")
-    drive(tracer, clock=clock2)
-    tracer.region_exit("timestep")
-    tracer.close()
-    run_trace = post_process(str(tmp_path / "trace"))
-
-    a = run_mon.regions["timestep"]
-    b = run_trace.regions["timestep"]
+    a = runs["monitor"].regions["timestep"]
+    b = runs["tracer"].regions["timestep"]
     assert a.measurements.num_steps == b.measurements.num_steps == 20
     np.testing.assert_allclose(a.measurements.data_lb, b.measurements.data_lb,
                                rtol=1e-6)
@@ -87,17 +74,16 @@ def test_tracer_storage_scales_with_devices_and_steps(tmp_path):
     with devices x steps, monitor JSON stays O(regions)."""
 
     def trace_size(ndev, steps):
-        clock = [0.0]
         res = ResourceConfig(num_hosts=1, devices_per_host=ndev)
         d = str(tmp_path / f"t{ndev}_{steps}")
-        tr = TraceRecorder(d, res, clock=lambda: clock[0])
-        tr.attach_static("s", PROFILE)
-        tr.region_enter("s")
-        for _ in range(steps):
-            clock[0] += 0.01
-            tr.record_step()
-        tr.region_exit("s")
-        tr.close()
+        ses, clock = clocked_session("tracer", resources=res, trace_dir=d)
+        ses.attach_static("s", PROFILE)
+        ses.start()
+        with ses.region("s"):
+            for _ in range(steps):
+                clock[0] += 0.01
+                ses.observe_step()
+        ses.stop()  # close the event streams without post-processing
         return trace_storage_bytes(d)
 
     s1 = trace_size(2, 10)
@@ -106,12 +92,12 @@ def test_tracer_storage_scales_with_devices_and_steps(tmp_path):
     assert s2 > 1.8 * s1     # scales with devices
     assert s3 > 3.0 * s1     # scales with steps
 
-    mon = TalpMonitor(MonitorConfig(app_name="m"), RES)
-    mon.start()
-    with mon.region("s"):
+    ses, _ = clocked_session("monitor")
+    ses.start()
+    with ses.region("s"):
         for _ in range(100):
-            mon.observe_step()
-    run = mon.finalize()
+            ses.observe_step()
+    run = ses.finalize()
     run.save(tmp_path / "mon.json")
     assert os.path.getsize(tmp_path / "mon.json") < 16_000  # O(regions)
 
@@ -119,9 +105,10 @@ def test_tracer_storage_scales_with_devices_and_steps(tmp_path):
 def _make_history(root, runs=4, slow_at=None):
     clock = [0.0]
     for i in range(runs):
-        mon = TalpMonitor(
-            MonitorConfig(app_name="app", clock=lambda: clock[0],
-                          sync_regions=False, lb_sample_every=1),
+        ses = PerfSession(
+            SessionConfig(app_name="app", backend="monitor",
+                          clock=lambda: clock[0], sync_regions=False,
+                          lb_sample_every=1, respect_env=False),
             ResourceConfig(num_hosts=1, devices_per_host=8),
             metadata={
                 "git_commit_short": f"c{i:02d}",
@@ -132,13 +119,13 @@ def _make_history(root, runs=4, slow_at=None):
         if slow_at is not None and i == slow_at:
             # remat bug: 2x executed flops
             prof = StepProfile(**{**PROFILE.to_json(), "flops": 2e12})
-        mon.attach_static("timestep", prof)
-        mon.start()
-        with mon.region("timestep"):
+        ses.attach_static("timestep", prof)
+        ses.start()
+        with ses.region("timestep"):
             for _ in range(10):
                 clock[0] += 0.02 if (slow_at is not None and i == slow_at) else 0.01
-                mon.observe_step()
-        run = mon.finalize()
+                ses.observe_step()
+        run = ses.finalize()
         run.timestamp = f"2026-07-{10+i:02d}T01:00:00"
         run.save(os.path.join(root, "case1", "history", f"run_{i}.json"))
 
@@ -212,15 +199,16 @@ def test_per_computation_breakdown_flows_to_report(tmp_path):
     top = prof.top_computations(1)[0]
     assert isinstance(top, ComputationCounters) and top.hbm_bytes > 0
 
-    mon = TalpMonitor(
-        MonitorConfig(app_name="bd", sync_regions=False),
+    ses = PerfSession(
+        SessionConfig(app_name="bd", backend="monitor", sync_regions=False,
+                      respect_env=False),
         ResourceConfig(num_hosts=1, devices_per_host=1),
     )
-    with mon:
-        with mon.region("train_step"):
-            mon.observe_step()
-        mon.attach_static("train_step", prof)
-    run = mon.finalize()
+    with ses:
+        with ses.region("train_step"):
+            ses.observe_step()
+        ses.attach_static("train_step", prof)
+    run = ses.finalize()
     assert "per_computation" not in run.metadata  # side-channel is gone
     reg = run.regions["train_step"]
     assert reg.computations and top.name in reg.computations
@@ -251,16 +239,14 @@ def test_tracer_postprocess_carries_computations(tmp_path):
                                          flops=1e12, hbm_bytes=1e10),
         },
     )
-    clock = [0.0]
-    tr = TraceRecorder(str(tmp_path / "tr"), RES, clock=lambda: clock[0])
-    tr.attach_static("s", prof)
-    tr.region_enter("s")
-    for _ in range(3):
-        clock[0] += 0.01
-        tr.record_step()
-    tr.region_exit("s")
-    tr.close()
-    run = post_process(str(tmp_path / "tr"))
+    ses, clock = clocked_session("tracer", tmp_path=tmp_path / "tr")
+    ses.attach_static("s", prof)
+    ses.start()
+    with ses.region("s"):
+        for _ in range(3):
+            clock[0] += 0.01
+            ses.observe_step()
+    run = ses.finalize()
     comps = run.regions["s"].computations
     assert comps["entry"].flops == pytest.approx(3e12)  # scaled by steps
     # Global inherits the child breakdown, like the monitor
