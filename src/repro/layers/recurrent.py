@@ -395,7 +395,7 @@ def mlstm_block(
             keep = seq_mask[:, 0]
             C = jnp.where(keep[:, None, None, None], C, cache["C"])
             n = jnp.where(keep[:, None, None], n, cache["n"])
-            m_new = jnp.where(keep, m_new, cache["m"])
+            m_new = jnp.where(keep[:, None], m_new, cache["m"])
         new_state = (C, n, m_new)
     else:
         init = (cache["C"], cache["n"], cache["m"]) if cache is not None else None

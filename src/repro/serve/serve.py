@@ -46,6 +46,10 @@ class ServeConfig:
     eos_check_every: int = 8
 
 
+def _cache_path_name(path) -> str:
+    return "/".join(str(p.key) if hasattr(p, "key") else str(p) for p in path)
+
+
 def cache_pspec_tree(cfg, mesh, caches):
     """PartitionSpecs for the stacked cache pytree.
 
@@ -71,7 +75,7 @@ def cache_pspec_tree(cfg, mesh, caches):
 
     def f(path_leaf):
         path, leaf = path_leaf
-        name = "/".join(str(p.key) if hasattr(p, "key") else str(p) for p in path)
+        name = _cache_path_name(path)
         nd = len(leaf.shape)
         b = leaf.shape[1] if nd >= 2 else 1
         batch = batch_ax(b)
@@ -212,6 +216,9 @@ class BatchScheduler:
     masked out of the decode step's cache writes and recurrent-state
     advance, and a prefill chunk only touches its own slot's cache lines —
     so the generated tokens are bitwise identical with overlap on or off.
+    Reattaching a freed slot restores its recurrent-state carries to their
+    initial values (stale attention KV is already masked by the visible
+    window), so a reused slot behaves exactly like a fresh one.
 
     Token readback is **deferred and batched**: decode steps and prefill
     completions append on-device token arrays to a pending list, and one
@@ -266,6 +273,20 @@ class BatchScheduler:
             observe=lambda out: {"outputs": out[0]},
         )
         self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
+        # fresh-state template for slot reuse: unlike attention KV (stale
+        # lines are masked by cache_len/kv_len), recurrent state has no
+        # positional masking, so a reattached slot must have its carries
+        # restored to their INITIAL values — which are not all zero (sLSTM's
+        # stabilizer m starts at -1e30). One batch-1 leaf per recurrent
+        # cache entry, broadcast into the reused slots' rows at attach.
+        self._fresh_state = [
+            None if "attn" in _cache_path_name(path) else leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                T.init_cache(cfg, 1, 1)
+            )[0]
+        ]
+        self._has_recurrent = any(l is not None for l in self._fresh_state)
+        self._dirty: set[int] = set()  # slots whose state may be non-fresh
         self.tokens = jnp.zeros((scfg.batch, 1), jnp.int32)
         self.queue: list[dict] = []
         self.active: list[dict | None] = [None] * scfg.batch   # decoding slots
@@ -274,8 +295,10 @@ class BatchScheduler:
         # in-flight prefills: FIFO of {"req","slot","prompt","done"}
         self._prefills: list[dict] = []
         self._prefilling: list[dict | None] = [None] * scfg.batch
-        # next-token seeds (slot, device scalar) applied in ONE scatter/tick
-        self._seeds: list[tuple[int, Any]] = []
+        # next-token seeds {slot: device scalar} applied in ONE scatter/tick;
+        # keyed by slot so a retired request's still-queued seed can never
+        # race the reattached request's seed in the scatter
+        self._seeds: dict[int, Any] = {}
         # pending readbacks: (device tokens (n,1), row->request map); flushed
         # in a single device_get
         self._pending: list[tuple[Any, list[dict | None]]] = []
@@ -295,6 +318,10 @@ class BatchScheduler:
 
     def submit(self, prompt_tokens, request_id, max_new: int = 32) -> None:
         prompt = list(prompt_tokens)
+        if max_new < 1:
+            # the first generated token falls out of the prefill logits
+            # unconditionally, so a zero budget is unsatisfiable
+            raise ValueError(f"request {request_id!r}: max_new must be >= 1")
         # cache writes past max_len would be silently dropped by the masked
         # scatter (mode="drop") — garbage tokens with no error — so reject
         # oversized requests at the door. The last decode writes position
@@ -319,20 +346,47 @@ class BatchScheduler:
         return self.active[slot] is None and self._prefilling[slot] is None
 
     def _attach(self) -> None:
+        reused = []
         for slot in range(self.scfg.batch):
             if self._free(slot) and self.queue:
                 req = self.queue.pop(0)
                 self.pos[slot] = 0
+                if slot in self._dirty:
+                    reused.append(slot)
+                self._dirty.add(slot)
                 if not req["prompt"]:
                     # nothing to prefill: decode from an empty cache off a
                     # constant BOS-like seed
-                    self._seeds.append((slot, 0))
+                    self._seeds[slot] = 0
                     self.active[slot] = req
                 else:
+                    # drop any stale seed a just-retired request left queued
+                    self._seeds.pop(slot, None)
                     task = {"req": req, "slot": slot, "done": 0,
                             "prompt": np.asarray(req["prompt"], np.int32)}
                     self._prefilling[slot] = task
                     self._prefills.append(task)
+        if reused:
+            self._reset_slots(reused)
+
+    def _reset_slots(self, slots: list[int]) -> None:
+        """Restore reused slots' recurrent-state cache rows (SSM/conv/xLSTM
+        carries) to their initial values before the new request runs.
+        Attention KV needs no reset — stale lines never enter the visible
+        window — but recurrent state carries unconditionally, so without
+        this the first prefill chunk (or decode step) of a reattached slot
+        would continue from the retired request's final state."""
+        if not self._has_recurrent:
+            return
+        idx = jnp.asarray(slots, jnp.int32)
+        flat, treedef = jax.tree_util.tree_flatten(self.caches)
+        with compat.use_mesh(self.mesh):
+            leaves = [
+                leaf if fresh is None
+                else leaf.at[:, idx].set(fresh.astype(leaf.dtype))
+                for leaf, fresh in zip(flat, self._fresh_state)
+            ]
+        self.caches = jax.tree_util.tree_unflatten(treedef, leaves)
 
     def _dispatch_prefill_chunk(self) -> None:
         """Dispatch one ``prefill_chunk``-token chunk for the oldest
@@ -361,17 +415,18 @@ class BatchScheduler:
             self.pos[slot] = len(prompt)
             req["_pending"] += 1
             self._pending.append((next_tok.reshape(1, 1), [req]))
-            self._seeds.append((slot, next_tok[0]))
+            self._seeds[slot] = next_tok[0]
 
     def _apply_seeds(self) -> None:
         """All newly seeded slots in ONE vectorized device-side scatter —
-        no per-slot host round-trips."""
+        no per-slot host round-trips. ``_seeds`` is keyed by slot (newest
+        seed wins), so the scatter indices are unique by construction."""
         if not self._seeds:
             return
-        seeds, self._seeds = self._seeds, []
-        slots = jnp.asarray([s for s, _ in seeds], jnp.int32)
+        seeds, self._seeds = self._seeds, {}
+        slots = jnp.asarray(list(seeds), jnp.int32)
         toks = jnp.stack(
-            [jnp.asarray(t, jnp.int32).reshape(()) for _, t in seeds]
+            [jnp.asarray(t, jnp.int32).reshape(()) for t in seeds.values()]
         )
         self.tokens = self.tokens.at[slots, 0].set(toks)
 
