@@ -13,8 +13,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
 (``PYTHONPATH=src python -m pytest -x -q``) plus a cold-vs-cached
 ``analyze_hlo`` timing assertion (so the HLO parse cache cannot silently
 regress even if the equivalent unit test is edited away) plus the cheap
-shape of ``benchmarks/serve_throughput.py`` (overlapped chunked prefill
-must keep producing identical tokens with no decode gap while prefilling).
+shape of ``benchmarks/serve_throughput.py`` (paged and dense KV layouts
+must keep producing identical tokens, overlapped chunked prefill must keep
+producing identical tokens with no decode gap while prefilling, and the
+paged pool footprint must stay strictly below the dense buffers).
 """
 
 from __future__ import annotations
@@ -89,9 +91,9 @@ def check() -> int:
     try:
         print(serve_throughput.check())
     except AssertionError as e:
-        print(f"[check] serve overlap: {e}", file=sys.stderr)
+        print(f"[check] serve paged/overlap: {e}", file=sys.stderr)
         return 1
-    print("[check] tier-1 suite green, hlo cache OK, serve overlap OK")
+    print("[check] tier-1 suite green, hlo cache OK, serve paged+overlap OK")
     return 0
 
 

@@ -1,8 +1,8 @@
-"""Serving throughput A/B — overlapped chunked prefill vs stop-the-world.
+"""Serving throughput A/B — paged vs dense KV cache, overlap vs stop-world.
 
-Runs the same request trace through ``serve.BatchScheduler`` twice (only
-``ServeConfig.overlap`` differs) and measures what the ISSUE's acceptance
-criteria name:
+Runs the same request trace through ``serve.BatchScheduler`` three ways —
+paged+overlapped (the production configuration), paged+stop-the-world, and
+dense+overlapped — and measures what the ISSUE's acceptance criteria name:
 
   tokens/sec            end-to-end generated-token throughput
   ttft                  time from submit to the first-token dispatch
@@ -10,23 +10,32 @@ criteria name:
   decode max gap        longest wall-clock gap between consecutive decode
                         dispatches while a prefill was in flight — the
                         "decode stall" a stop-the-world prefill causes
+  peak KV bytes         attention-cache HBM footprint: the full dense
+                        buffers vs the paged pool (sized to the workload's
+                        concurrent-token peak), plus the pool's live-page
+                        peak and utilization
   overlap guarantee     scheduler-level invariant: every tick with an
                         in-flight prefill and >=1 decoding slot also
                         dispatched a decode (no gap > one tick)
-  identical tokens      overlap on/off produce the same streams
+  identical tokens      paged == dense, and overlap on/off, token for token
 
 Emits ``BENCH_serve.json`` (default ``results/BENCH_serve.json``) so the
 repo carries a serve-path perf trajectory next to the TALP records; the
 ``--check`` shape in ``benchmarks/run.py`` runs the tiny variant and
-asserts token identity + the overlap guarantee.
+asserts paged/dense token identity, the overlap guarantee, and that the
+paged pool footprint lands strictly below dense for the mixed-length trace.
 
-    PYTHONPATH=src:. python benchmarks/serve_throughput.py
+    PYTHONPATH=src:. python benchmarks/serve_throughput.py [arch ...]
+
+With archs given (the nightly sweep), the first writes BENCH_serve.json
+and each additional arch writes BENCH_serve_<arch>.json.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 from benchmarks.common import RESULTS_DIR, csv_line
@@ -56,10 +65,10 @@ def _request_trace(cfg, n_requests: int, seed: int = 0):
 
 
 def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
-             batch: int, prefill_chunk: int, max_len: int = 128) -> dict:
+             batch: int, prefill_chunk: int, max_len: int = 128,
+             paged: bool = True, page_size: int = 16,
+             num_pages: int | None = None) -> dict:
     """One scheduler pass; returns the measured dict for BENCH_serve.json."""
-    import jax
-
     from repro import compat
     from repro.serve.serve import BatchScheduler, ServeConfig
 
@@ -67,7 +76,9 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
         sched = BatchScheduler(
             cfg, mesh,
             ServeConfig(max_len=max_len, batch=batch,
-                        prefill_chunk=prefill_chunk, overlap=overlap),
+                        prefill_chunk=prefill_chunk, overlap=overlap,
+                        paged=paged, page_size=page_size,
+                        num_pages=num_pages),
             params,
         )
         # stagger: half the requests arrive while the first half decodes,
@@ -108,6 +119,7 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
     tokens = sum(len(r["generated"]) for r in sched.completed)
     return {
         "overlap": overlap,
+        "paged": paged,
         "requests": len(prompts),
         "completed": len(sched.completed),
         "ticks": ticks,
@@ -125,31 +137,53 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
             max((b - a for a, b in zip(decode_times, decode_times[1:])),
                 default=0.0), 4
         ),
+        "kv": sched.kv_cache_stats(),
         "stats": dict(sched.stats),
         "generated": {str(r["id"]): r["generated"] for r in sched.completed},
     }
 
 
+def _workload_pages(prompts, max_new: int, batch: int, page_size: int) -> int:
+    """Pool size for the trace: every concurrently-resident request (at most
+    ``batch``) fully extended — the honest paged footprint, well below the
+    dense ``batch x max_len`` equivalent for mixed-length request sets."""
+    need = max(len(p) for p in prompts) + max_new
+    return batch * (-(-need // page_size))
+
+
 def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
-        prefill_chunk: int = 8, cfg_name: str = "tinyllama-1.1b") -> dict:
+        prefill_chunk: int = 8, cfg_name: str = "tinyllama-1.1b",
+        page_size: int = 16, max_len: int = 128) -> dict:
     cfg, mesh, params = _build(cfg_name)
     prompts = _request_trace(cfg, n_requests)
-    # warmup: compile decode + prefill traces outside the measured passes
-    run_mode(cfg, mesh, params, prompts[:2], overlap=True, max_new=2,
-             batch=batch, prefill_chunk=prefill_chunk)
-    overlapped = run_mode(cfg, mesh, params, prompts, overlap=True,
-                          max_new=max_new, batch=batch,
-                          prefill_chunk=prefill_chunk)
-    stop_world = run_mode(cfg, mesh, params, prompts, overlap=False,
-                          max_new=max_new, batch=batch,
-                          prefill_chunk=prefill_chunk)
-    identical = overlapped.pop("generated") == stop_world.pop("generated")
-    ostats = overlapped["stats"]
+    num_pages = _workload_pages(prompts, max_new, batch, page_size)
+    kw = dict(max_new=max_new, batch=batch, prefill_chunk=prefill_chunk,
+              max_len=max_len, page_size=page_size)
+    # warmup: compile BOTH layouts' decode + prefill traces outside the
+    # measured passes (the jitted pairs are keyed on paged vs dense)
+    run_mode(cfg, mesh, params, prompts[:2], overlap=True, paged=True,
+             num_pages=num_pages, **{**kw, "max_new": 2})
+    run_mode(cfg, mesh, params, prompts[:2], overlap=True, paged=False,
+             **{**kw, "max_new": 2})
+    paged_ov = run_mode(cfg, mesh, params, prompts, overlap=True, paged=True,
+                        num_pages=num_pages, **kw)
+    paged_sw = run_mode(cfg, mesh, params, prompts, overlap=False, paged=True,
+                        num_pages=num_pages, **kw)
+    dense_ov = run_mode(cfg, mesh, params, prompts, overlap=True, paged=False,
+                        **kw)
+    gen_po, gen_ps = paged_ov.pop("generated"), paged_sw.pop("generated")
+    gen_do = dense_ov.pop("generated")
+    ostats = paged_ov["stats"]
+    kv_paged, kv_dense = paged_ov["kv"], dense_ov["kv"]
     return {
         "arch": cfg_name,
         "config": {"requests": n_requests, "max_new": max_new, "batch": batch,
-                   "prefill_chunk": prefill_chunk},
-        "identical_tokens": identical,
+                   "prefill_chunk": prefill_chunk, "max_len": max_len,
+                   "page_size": page_size, "num_pages": num_pages},
+        # overlap on/off bitwise token identity (on the paged layout)
+        "identical_tokens": gen_po == gen_ps,
+        # paged vs dense bitwise token identity (the tentpole guarantee)
+        "paged_matches_dense": gen_po == gen_do,
         # prefill and decode genuinely co-existed (overlap_ticks > 0) and no
         # tick's decode dispatch ever waited behind prefill work — "no
         # decode gap > one tick while a prefill is in progress"
@@ -157,25 +191,45 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
             ostats["overlap_ticks"] > 0
             and ostats["decode_after_prefill_ticks"] == 0
         ),
-        "overlapped": overlapped,
-        "stop_world": stop_world,
+        "kv": {
+            "paged": kv_paged,
+            "dense": kv_dense,
+            # the memory win: pool footprint strictly below the dense buffers
+            "paged_below_dense": kv_paged["kv_bytes"] < kv_dense["kv_bytes"],
+            "savings_ratio": round(
+                kv_dense["kv_bytes"] / max(kv_paged["kv_bytes"], 1), 3
+            ),
+        },
+        "paged_overlap": paged_ov,
+        "paged_stop_world": paged_sw,
+        "dense_overlap": dense_ov,
     }
 
 
 def check(out_path: str | None = None) -> str:
     """The cheap CI shape: tiny trace, asserts the acceptance criteria."""
-    result = run(n_requests=3, max_new=6, batch=2, prefill_chunk=4)
+    result = run(n_requests=3, max_new=6, batch=2, prefill_chunk=4,
+                 max_len=64)
     if not result["identical_tokens"]:
         raise AssertionError(
             "overlapped chunked prefill changed generated tokens vs "
             "stop-the-world prefill"
         )
+    if not result["paged_matches_dense"]:
+        raise AssertionError(
+            "paged KV cache changed generated tokens vs the dense layout"
+        )
     if not result["overlap_no_decode_gap"]:
         raise AssertionError(
             "decode gap while a prefill was in flight: "
-            f"{result['overlapped']['stats']}"
+            f"{result['paged_overlap']['stats']}"
         )
-    ov, sw = result["overlapped"], result["stop_world"]
+    if not result["kv"]["paged_below_dense"]:
+        raise AssertionError(
+            "paged pool footprint not below dense KV bytes: "
+            f"{result['kv']}"
+        )
+    ov, sw = result["paged_overlap"], result["paged_stop_world"]
     # only enforce the wall-clock comparison when stop-the-world stalled
     # measurably (tiny CI shapes on loaded runners are jitter-prone)
     if sw["decode_max_gap_s"] > 0.05 and (
@@ -186,10 +240,10 @@ def check(out_path: str | None = None) -> str:
         )
     _save(result, out_path)
     return csv_line(
-        "check_serve_overlap",
+        "check_serve_paged",
         ov["wall_s"] * 1e6 / max(ov["ticks"], 1),
-        f"tok/s={ov['tokens_per_sec']};stopworld_tok/s={sw['tokens_per_sec']};"
-        f"max_gap={ov['decode_max_gap_during_prefill_s']}s",
+        f"tok/s={ov['tokens_per_sec']};kv_savings={result['kv']['savings_ratio']}x;"
+        f"pool_util={result['kv']['paged']['pool_utilization']}",
     )
 
 
@@ -205,26 +259,45 @@ def _save(result: dict, out_path: str | None = None) -> str:
     return path
 
 
-def main() -> list[str]:
-    result = run()
-    path = _save(result)
-    ov, sw = result["overlapped"], result["stop_world"]
-    lines = [
-        csv_line("serve_overlapped", ov["wall_s"] * 1e6 / max(ov["ticks"], 1),
-                 f"tok/s={ov['tokens_per_sec']};ttft={ov['ttft_mean_s']}s;"
-                 f"max_gap={ov['decode_max_gap_during_prefill_s']}s"),
-        csv_line("serve_stop_world", sw["wall_s"] * 1e6 / max(sw["ticks"], 1),
-                 f"tok/s={sw['tokens_per_sec']};ttft={sw['ttft_mean_s']}s;"
-                 f"max_gap={sw['decode_max_gap_during_prefill_s']}s"),
-        csv_line("serve_identity", 0.0,
-                 f"identical_tokens={result['identical_tokens']};"
+def _lines(result: dict, path: str) -> list[str]:
+    po, do = result["paged_overlap"], result["dense_overlap"]
+    sw = result["paged_stop_world"]
+    tag = result["arch"]
+    return [
+        csv_line(f"serve_paged_overlap[{tag}]",
+                 po["wall_s"] * 1e6 / max(po["ticks"], 1),
+                 f"tok/s={po['tokens_per_sec']};ttft={po['ttft_mean_s']}s;"
+                 f"kv_bytes={po['kv']['kv_bytes']};"
+                 f"pool_util={po['kv']['pool_utilization']}"),
+        csv_line(f"serve_paged_stop_world[{tag}]",
+                 sw["wall_s"] * 1e6 / max(sw["ticks"], 1),
+                 f"tok/s={sw['tokens_per_sec']};ttft={sw['ttft_mean_s']}s"),
+        csv_line(f"serve_dense_overlap[{tag}]",
+                 do["wall_s"] * 1e6 / max(do["ticks"], 1),
+                 f"tok/s={do['tokens_per_sec']};kv_bytes={do['kv']['kv_bytes']}"),
+        csv_line(f"serve_identity[{tag}]", 0.0,
+                 f"overlap_identical={result['identical_tokens']};"
+                 f"paged_matches_dense={result['paged_matches_dense']};"
                  f"no_decode_gap={result['overlap_no_decode_gap']};"
-                 f"json={path}"),
+                 f"kv_savings={result['kv']['savings_ratio']}x;json={path}"),
     ]
+
+
+def main(archs: list[str] | None = None) -> list[str]:
+    archs = archs or ["tinyllama-1.1b"]
+    lines: list[str] = []
+    for i, arch in enumerate(archs):
+        result = run(cfg_name=arch)
+        path = _save(result) if i == 0 else _save(
+            result,
+            os.path.join(os.path.dirname(RESULTS_DIR) or "results",
+                         f"BENCH_serve_{arch}.json"),
+        )
+        lines += _lines(result, path)
     return lines
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    for line in main():
+    for line in main(sys.argv[1:] or None):
         print(line)

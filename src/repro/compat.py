@@ -23,6 +23,14 @@ compared — point releases backport features):
                          list in old JAX and a dict in new JAX;
                          ``memory_analysis()`` raises on some backends.
 * ``compiled_text``    — optimized-HLO text of a compiled executable.
+* ``pallas`` /
+  ``pallas_tpu``       — the Pallas kernel namespaces live under the
+                         *experimental* tree, whose layout and availability
+                         move between releases (and CPU-only builds may lack
+                         the TPU submodule). Kernel code imports the modules
+                         through these accessors; everything else must stay
+                         behind the ``repro.kernels`` ops wrappers, whose
+                         ``impl="reference"`` path needs no Pallas at all.
 
 Policy (recorded for future PRs): new code MUST import these helpers
 instead of touching ``jax.sharding.AxisType``-style attributes directly;
@@ -58,6 +66,38 @@ def _make_mesh_accepts_axis_types() -> bool:
 
 
 MAKE_MESH_HAS_AXIS_TYPES = _make_mesh_accepts_axis_types()
+
+try:  # experimental namespace: presence and layout are version-dependent
+    from jax.experimental import pallas as _pallas_mod
+except Exception:  # pragma: no cover - exercised on builds without Pallas
+    _pallas_mod = None
+try:
+    from jax.experimental.pallas import tpu as _pallas_tpu_mod
+except Exception:  # pragma: no cover - e.g. minimal CPU wheels
+    _pallas_tpu_mod = None
+
+HAS_PALLAS = _pallas_mod is not None
+HAS_PALLAS_TPU = _pallas_tpu_mod is not None
+
+
+def pallas():
+    """The Pallas core module (``pl`` by convention), feature-detected."""
+    if _pallas_mod is None:
+        raise ImportError(
+            "this JAX build has no Pallas; use the kernels' impl='reference' "
+            "path (pure jnp oracles) instead of the Pallas kernels"
+        )
+    return _pallas_mod
+
+
+def pallas_tpu():
+    """The Pallas TPU module (``pltpu`` by convention), feature-detected."""
+    if _pallas_tpu_mod is None:
+        raise ImportError(
+            "this JAX build has no Pallas TPU support; use the kernels' "
+            "impl='reference' path instead"
+        )
+    return _pallas_tpu_mod
 
 
 def jax_version() -> tuple[int, ...]:

@@ -108,6 +108,9 @@ class ModelConfig:
     q_chunk: int = 512
     kv_chunk: int = 1024
     causal_skip: bool = False
+    # paged decode-attention kernel implementation (serving):
+    # auto (Pallas on TPU, reference elsewhere) | pallas | interpret | reference
+    paged_attn_impl: str = "auto"
 
     # distribution
     sharding: str = "megatron"         # megatron | fsdp  (auto-checked)

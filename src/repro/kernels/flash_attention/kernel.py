@@ -24,7 +24,10 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro import compat
+
+pl = compat.pallas()
 
 NEG_INF = -1e30
 

@@ -12,7 +12,6 @@ import functools
 
 import jax
 
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_reference
 
 
@@ -42,6 +41,10 @@ def flash_attention(
         return attention_reference(
             q, k, v, causal=causal, window=window, softcap=softcap
         )
+    # lazy: the kernel module needs Pallas at import time, and the
+    # reference path must stay usable on builds without it
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, softcap=softcap,
         block_q=block_q, block_kv=block_kv,

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the paged decode-attention kernel.
+
+``paged_attention(...)`` routes to the Pallas kernel on TPU (or in
+interpret mode when asked) and to the pure-jnp gather oracle otherwise —
+the same ``impl`` contract as ``kernels.flash_attention``. The serving
+stack selects the implementation via ``ModelConfig.paged_attn_impl``; the
+reference path is the one that is bitwise identical to the dense cache
+layout (the paged-vs-dense token-identity guarantee).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "impl")
+)
+def paged_attention(
+    q, k_pages, v_pages, block_tables, *,
+    q_position, cache_len,
+    window: int | None = None,
+    softcap: float | None = None,
+    impl: str = "auto",  # auto | pallas | interpret | reference
+):
+    """Single-position attention against a paged KV pool.
+
+    q: (B,1,Hq,D); k_pages/v_pages: (P, page_size, Hkv, D); block_tables:
+    (B, n_logical) int32, ``-1`` = unallocated; q_position/cache_len: ()
+    or (B,). Returns (B,1,Hq,D) in q.dtype.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl == "reference":
+        return paged_attention_reference(
+            q, k_pages, v_pages, block_tables,
+            q_position=q_position, cache_len=cache_len,
+            window=window, softcap=softcap,
+        )
+    # lazy: the kernel module needs Pallas at import time, and the
+    # reference path must stay usable on builds without it
+    from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables,
+        q_position=q_position, cache_len=cache_len,
+        window=window, softcap=softcap,
+        interpret=(impl == "interpret"),
+    )

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Gathers the pages a slot owns into the dense ``(B, Smax, Hkv, D)`` layout
+through the block table, then runs the EXACT computation of
+``layers.attention.decode_attention`` (same ops, same order, same shapes).
+That transcription is load-bearing: the serving acceptance criterion is
+*bitwise* token identity between the paged and dense cache layouts, and it
+holds because post-mask the two paths are elementwise identical programs —
+whatever garbage lives in unallocated/unwritten pages is squashed to an
+exact 0 probability by the NEG_INF mask before it can touch the output.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(pages, block_tables):
+    """Materialize the per-slot dense view of a paged pool.
+
+    pages: (P, page, Hkv, D) physical pool; block_tables: (B, n_logical)
+    int32, ``-1`` = unallocated (clipped to page 0 — callers mask by
+    ``cache_len`` so the junk is never visible). Returns
+    (B, n_logical*page, Hkv, D).
+    """
+    P, page, Hkv, D = pages.shape
+    B, nL = block_tables.shape
+    tbl = jnp.clip(block_tables, 0, P - 1)
+    return pages[tbl].reshape(B, nL * page, Hkv, D)
+
+
+def paged_attention_reference(
+    q, k_pages, v_pages, block_tables, *, q_position, cache_len,
+    window: int | None = None, softcap: float | None = None,
+):
+    """Single-position attention against a paged cache.
+
+    q: (B,1,Hq,D); k_pages/v_pages: (P, page, Hkv, D); block_tables:
+    (B, n_logical) int32 (logical page j of slot b lives in physical page
+    ``block_tables[b, j]``); cache_len: () or (B,) valid token count;
+    q_position: () or (B,) query position (window masking).
+    Returns (B,1,Hq,D) in q.dtype.
+    """
+    k_cache = gather_pages(k_pages, block_tables)
+    v_cache = gather_pages(v_pages, block_tables)
+    # -- from here on: decode_attention verbatim --
+    B, _, Hq, D = q.shape
+    _, Sk, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, Hkv, G, D).transpose(0, 3, 2, 1, 4)  # (B,G,Hkv,1,D)
+    kg = k_cache.transpose(0, 2, 1, 3)  # (B,Hkv,Sk,D)
+    vg = v_cache.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bghqd,bhkd->bghqk", qg.astype(jnp.float32), kg.astype(jnp.float32))
+    s *= scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(Sk)[None, None, None, None, :]
+    qpos = jnp.asarray(q_position).reshape(-1, 1, 1, 1, 1)
+    mask = kpos < jnp.asarray(cache_len).reshape(-1, 1, 1, 1, 1)
+    if window is not None and window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bghqk,bhkd->bghqd", p, vg.astype(jnp.float32))
+    return o.transpose(0, 3, 2, 1, 4).reshape(B, 1, Hq, D).astype(q.dtype)

@@ -13,7 +13,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro import compat
+
+pl = compat.pallas()
 
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float, true_d: int,

@@ -1,8 +1,11 @@
-"""Serving launcher: continuous-batching decode with chunked prefill-on-
-attach overlapped with in-flight decode, and monitoring of both phases.
+"""Serving launcher: continuous-batching decode over a paged KV cache
+(``--dense`` for the baseline layout), chunked prefill-on-attach overlapped
+with in-flight decode, optional temperature/top-k sampling, and monitoring
+of both phases.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --smoke --requests 8 --max-new 8 --prefill-chunk 16 --talp-out talp/serve
+        --smoke --requests 8 --max-new 8 --prefill-chunk 16 \
+        --page-size 16 --talp-out talp/serve
 """
 
 from __future__ import annotations
@@ -24,6 +27,22 @@ def main(argv=None) -> int:
                     help="stop-the-world prefill on attach (A/B baseline)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="retire requests early on this token id")
+    ap.add_argument("--paged", dest="paged", action="store_true", default=True,
+                    help="paged KV cache (the default): shared page pool + "
+                         "per-slot block tables")
+    ap.add_argument("--dense", dest="paged", action="store_false",
+                    help="dense (batch x max_len) KV cache — the A/B baseline")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must divide --max-len)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: dense-equivalent "
+                         "capacity; size to the expected concurrent-token "
+                         "peak for the memory win)")
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature/top-k sampling instead of greedy argmax")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--sample-seed", type=int, default=0)
     ap.add_argument("--talp-out", default="")
     args = ap.parse_args(argv)
 
@@ -56,7 +75,12 @@ def main(argv=None) -> int:
             cfg, mesh,
             ServeConfig(max_len=args.max_len, batch=args.batch,
                         prefill_chunk=args.prefill_chunk,
-                        overlap=not args.no_overlap, eos_id=args.eos_id),
+                        overlap=not args.no_overlap, eos_id=args.eos_id,
+                        paged=args.paged, page_size=args.page_size,
+                        num_pages=args.num_pages,
+                        greedy=not args.sample,
+                        temperature=args.temperature, top_k=args.top_k,
+                        sample_seed=args.sample_seed),
             params, session=session,
         )
         for rid in range(args.requests):
@@ -70,6 +94,14 @@ def main(argv=None) -> int:
     print(f"[serve] completed {len(sched.completed)}/{args.requests} requests "
           f"in {steps} ticks ({sched.stats['decode_steps']} decode steps, "
           f"{sched.stats['prefill_chunks']} prefill chunks)")
+    kv = sched.kv_cache_stats()
+    if kv["layout"] == "paged":
+        print(f"[serve] paged KV: {kv['kv_bytes']} pool bytes, "
+              f"{kv['num_pages']} pages x {kv['page_size']} tokens, "
+              f"peak {kv['peak_used_pages']} pages in use "
+              f"(utilization {kv['pool_utilization']})")
+    else:
+        print(f"[serve] dense KV: {kv['kv_bytes']} bytes")
     session.finalize(args.talp_out or None)
     if session.last_record_path:
         print(f"[serve] TALP record: {session.last_record_path}")

@@ -256,6 +256,28 @@ def _pad_axis(x, axis, size, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def decode_attention_paged(
+    q, k_pages, v_pages, block_tables, *, q_position, cache_len,
+    window: int | None = None, softcap: float | None = None,
+    impl: str = "auto",
+):
+    """Single-position attention against a paged KV pool.
+
+    q: (B,1,Hq,D); k_pages/v_pages: (P, page_size, Hkv, D) shared pool;
+    block_tables: (B, n_logical) int32 — logical page j of slot b lives in
+    physical page ``block_tables[b, j]`` (-1 = unallocated). Routed through
+    ``repro.kernels.paged_attention`` (Pallas on TPU, gather oracle
+    elsewhere); the reference path is bitwise identical to
+    ``decode_attention`` over the equivalent dense cache."""
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    return paged_attention(
+        q, k_pages, v_pages, block_tables,
+        q_position=q_position, cache_len=cache_len,
+        window=window, softcap=softcap, impl=impl,
+    )
+
+
 def decode_attention(
     q, k_cache, v_cache, *, q_position, cache_len,
     window: int | None = None, softcap: float | None = None,
@@ -317,10 +339,13 @@ def attention_block(
     params, x, cfg, *,
     positions, lc: LogicalConstraints = NULL_CONSTRAINTS,
     causal=True, window=None, cache=None, cache_len=None,
-    seq_mask=None, cache_attend=False,
+    seq_mask=None, cache_attend=False, block_tables=None,
 ):
-    """Returns (out, new_cache). ``cache``: dict(k=(B,Smax,Hkv,D), v=...) or
-    None for full-sequence (training / prefill without cache) mode.
+    """Returns (out, new_cache). ``cache``: dict(k=(B,Smax,Hkv,D), v=...),
+    dict(k_pages=(P,page,Hkv,D), v_pages=...) for the paged layout (then
+    ``block_tables`` (B, n_logical) maps each row's logical pages to
+    physical pool pages), or None for full-sequence (training / prefill
+    without cache) mode.
 
     ``positions`` is (B,S) and doubles as the per-slot cache write index —
     each batch row writes its k/v at its own offsets (continuous batching:
@@ -354,7 +379,61 @@ def attention_block(
     v = lc(v, "batch", "seq_kv", "kv_heads", None)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "k_pages" in cache:
+        # paged layout: write through the block table into the shared pool,
+        # then attend through the table. Rows own disjoint physical pages
+        # (allocator invariant), so the flattened-pool scatter cannot
+        # collide across slots; entries that are masked, unallocated
+        # (table -1) or out of logical range push their write index past
+        # the pool end and are dropped.
+        k_pool, v_pool = cache["k_pages"], cache["v_pages"]
+        Pp, psize = k_pool.shape[0], k_pool.shape[1]
+        n_logical = block_tables.shape[1]
+        pos0 = positions[:, 0] if positions.ndim == 2 else positions
+        page_idx = positions // psize
+        phys_page = jnp.take_along_axis(
+            block_tables, jnp.clip(page_idx, 0, n_logical - 1), axis=1
+        )
+        flat_pos = phys_page * psize + positions % psize
+        valid = (phys_page >= 0) & (page_idx < n_logical)
+        if seq_mask is not None:
+            valid &= seq_mask
+        write_idx = jnp.where(valid, flat_pos, Pp * psize)
+        kc = k_pool.reshape(Pp * psize, hkv, hd).at[write_idx].set(
+            k.astype(k_pool.dtype), mode="drop"
+        )
+        vc = v_pool.reshape(Pp * psize, hkv, hd).at[write_idx].set(
+            v.astype(v_pool.dtype), mode="drop"
+        )
+        new_cache = {
+            "k_pages": kc.reshape(k_pool.shape),
+            "v_pages": vc.reshape(v_pool.shape),
+        }
+        if S == 1:
+            o = decode_attention_paged(
+                q, new_cache["k_pages"], new_cache["v_pages"], block_tables,
+                q_position=pos0, cache_len=cache_len,
+                window=window, softcap=cfg.attn_softcap,
+                impl=cfg.paged_attn_impl,
+            )
+        else:
+            # chunked prefill: gather the rows' pages into the dense layout
+            # and attend exactly like the dense cache_attend path (the
+            # gather makes this branch elementwise identical to it)
+            from repro.kernels.paged_attention.ref import gather_pages
+
+            kg = gather_pages(new_cache["k_pages"], block_tables)
+            vg = gather_pages(new_cache["v_pages"], block_tables)
+            Smax = kg.shape[1]
+            k_positions = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+            o = flash_attention(
+                q, kg, vg, q_positions=positions, k_positions=k_positions,
+                causal=causal, window=window, softcap=cfg.attn_softcap,
+                kv_len=cache_len,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                causal_skip=False,
+            )
+    elif cache is not None:
         # write current k/v at each row's own positions, then attend against
         # the cache. A masked (B,S) scatter replaces the old scalar
         # dynamic_update_slice: slots at different positions write to

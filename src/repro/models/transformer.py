@@ -94,7 +94,7 @@ def model_params(cfg) -> dict:
 
 def _apply_slot(
     slot_params, kind: str, x, cfg, *, positions, lc, cache=None, cache_len=None,
-    seq_mask=None, cache_attend=False,
+    seq_mask=None, cache_attend=False, block_tables=None,
 ):
     """One block of the pattern. Returns (x, new_cache, aux).
 
@@ -115,6 +115,7 @@ def _apply_slot(
             causal=not cfg.encoder_only, window=window,
             cache=att_cache, cache_len=cache_len,
             seq_mask=seq_mask, cache_attend=cache_attend,
+            block_tables=block_tables,
         )
         # constrain BEFORE the residual add: the TP partial sums then lower
         # to reduce-scatter onto the seq-sharded residual instead of a full
@@ -179,8 +180,10 @@ def _remat(fn, cfg):
 
 
 def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None,
-               seq_mask=None, cache_attend=False):
+               seq_mask=None, cache_attend=False, block_tables=None):
     """Scan pattern x repeats. caches: {slot_name: stacked cache} or None.
+    ``block_tables`` (B, n_logical) selects the paged attention-cache
+    layout (shared across layers — allocation is per token position).
     Returns (x, new_caches, aux_totals)."""
     slot_names = list(params["slots"].keys())
 
@@ -196,6 +199,7 @@ def _run_stack(params, x, cfg, *, positions, lc, caches=None, cache_len=None,
                 cache=cache_rows.get(name) if cache_rows else None,
                 cache_len=cache_len,
                 seq_mask=seq_mask, cache_attend=cache_attend,
+                block_tables=block_tables,
             )
             if nc is not None:
                 new_cache_rows[name] = nc
@@ -333,14 +337,40 @@ def apply_logits(params, batch, cfg, lc: LogicalConstraints = NULL_CONSTRAINTS):
     return _logits(params, x, cfg, lc), aux
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
-    """Stacked decode caches per slot."""
+def init_cache(cfg, batch: int, max_len: int, dtype=None, *,
+               paged: bool = False, page_size: int = 16,
+               num_pages: int | None = None) -> dict:
+    """Stacked decode caches per slot.
+
+    ``paged=True`` swaps each attention cache's dense per-slot
+    ``(R, B, max_len, Hkv, hd)`` buffers for a shared pool of
+    ``num_pages`` fixed-size pages ``(R, num_pages, page_size, Hkv, hd)``
+    addressed through a per-slot block table (see ``decode_step``) — HBM
+    then scales with live tokens, not ``batch x max_len``. ``num_pages``
+    defaults to dense-equivalent capacity; serving sizes it to the
+    workload. Recurrent (conv/ssm/xLSTM) state stays dense per slot —
+    it is O(batch), not O(batch x seq)."""
     dtype = dtype or cfg.compute_dtype
+    if paged and num_pages is None:
+        num_pages = -(-batch * max_len // page_size)
     caches: dict[str, Any] = {}
     for i, kind in enumerate(cfg.pattern):
         name = f"slot{i}_{kind}"
         if kind in ("attn", "local_attn", "moe"):
             hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+            if paged:
+                c = {
+                    "attn": {
+                        "k_pages": jnp.zeros(
+                            (cfg.repeats, num_pages, page_size, hkv, hd), dtype
+                        ),
+                        "v_pages": jnp.zeros(
+                            (cfg.repeats, num_pages, page_size, hkv, hd), dtype
+                        ),
+                    }
+                }
+                caches[name] = c
+                continue
             c = {
                 "attn": {
                     "k": jnp.zeros((cfg.repeats, batch, max_len, hkv, hd), dtype),
@@ -384,7 +414,7 @@ def prefill(params, batch, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINT
 
 def prefill_chunk(
     params, batch, cfg, caches, start, length,
-    lc: LogicalConstraints = NULL_CONSTRAINTS,
+    lc: LogicalConstraints = NULL_CONSTRAINTS, block_tables=None,
 ):
     """One chunk of an incremental prefill: run ``batch["tokens"]`` (B,C)
     through the stack as positions ``start .. start+length``, writing the
@@ -397,7 +427,8 @@ def prefill_chunk(
     chunk leaves exactly the state a tight chunk would have.
     Returns (logits (B,V) at each row's LAST VALID position, new_caches) —
     on the final chunk of a prompt those logits sample the first generated
-    token."""
+    token. ``block_tables`` (B, n_logical) routes attention-cache writes
+    and reads through the paged pool layout (see ``init_cache``)."""
     x = _embed_inputs(params, batch, cfg, lc)
     B, C, _ = x.shape
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
@@ -408,6 +439,7 @@ def prefill_chunk(
     x, new_caches, _ = _run_stack(
         params, x, cfg, positions=positions, lc=lc, caches=caches,
         cache_len=start + length, seq_mask=seq_mask, cache_attend=True,
+        block_tables=block_tables,
     )
     x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
     x_last = jnp.take_along_axis(
@@ -419,13 +451,16 @@ def prefill_chunk(
 
 def decode_step(
     params, tokens, pos, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINTS,
-    frontend=None, active=None,
+    frontend=None, active=None, block_tables=None,
 ):
     """One decode step. tokens: (B,1) int32; pos: () scalar or (B,) vector of
     per-slot positions — continuous batching attaches requests mid-flight, so
     every slot carries its own position (RoPE, cache write offset, visible
     cache length all follow it). ``active``: optional (B,) bool; inactive
     slots neither write the KV cache nor advance recurrent state.
+    ``block_tables``: optional (B, n_logical) int32 — paged attention-cache
+    layout (``init_cache(..., paged=True)``); the slot's token writes and
+    the decode attention both address the shared pool through it.
     Returns (logits (B,V), new_caches)."""
     batch = {"tokens": tokens, "frontend": frontend}
     x = _embed_inputs(params, batch, cfg, lc)
@@ -435,7 +470,7 @@ def decode_step(
     seq_mask = None if active is None else jnp.asarray(active).reshape(B, 1)
     x, new_caches, _ = _run_stack(
         params, x, cfg, positions=positions, lc=lc, caches=caches,
-        cache_len=pos + 1, seq_mask=seq_mask,
+        cache_len=pos + 1, seq_mask=seq_mask, block_tables=block_tables,
     )
     x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
     logits = _logits(params, x, cfg, lc)

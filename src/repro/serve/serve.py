@@ -28,8 +28,17 @@ from repro.models import transformer as T
 class ServeConfig:
     max_len: int
     batch: int
+    # sampling: greedy argmax by default (bitwise-stable serving); with
+    # greedy=False the decode and prefill-chunk steps sample on device with
+    # temperature (and optionally top_k) from a per-slot PRNG key carried on
+    # device, folded with the sampled position each step — a request's
+    # stream is a pure function of (params, prompt, slot, sample_seed),
+    # never of co-resident traffic, the overlap schedule, or who occupied
+    # the slot before.
     temperature: float = 1.0
     greedy: bool = True
+    top_k: int | None = None
+    sample_seed: int = 0
     # chunked prefill-on-attach: token budget (= chunk size) the scheduler
     # spends on prefill per tick. With ``overlap=True`` (the default) chunks
     # are dispatched asynchronously BETWEEN decode dispatches, so attaching a
@@ -44,6 +53,17 @@ class ServeConfig:
     # paying one transfer per step).
     eos_id: int | None = None
     eos_check_every: int = 8
+    # paged KV cache (the default): attention caches live in a shared pool
+    # of ``page_size``-token pages addressed through per-slot block tables,
+    # allocated as prefill/decode actually write and freed on retire — HBM
+    # scales with live tokens instead of batch x max_len. ``num_pages=None``
+    # sizes the pool at dense-equivalent capacity (batch*max_len/page_size);
+    # real deployments size it to the expected concurrent-token peak.
+    # Tokens are bitwise identical paged vs dense. paged=False keeps the
+    # dense (B, max_len) layout (the A/B baseline).
+    paged: bool = True
+    page_size: int = 16
+    num_pages: int | None = None
 
 
 def _cache_path_name(path) -> str:
@@ -77,6 +97,11 @@ def cache_pspec_tree(cfg, mesh, caches):
         path, leaf = path_leaf
         name = _cache_path_name(path)
         nd = len(leaf.shape)
+        if "pages" in name:  # paged pool (R, P, page, Hkv, hd): no batch dim
+            # pages are gathered by physical index, so the page axis must
+            # stay unsharded; kv-heads shard over "model" like the dense
+            # layout (the pool is the same bytes, just re-bucketed)
+            return P(None, None, None, "model" if kv_div else None, None)
         b = leaf.shape[1] if nd >= 2 else 1
         batch = batch_ax(b)
         if "attn" in name:  # (R, B, Smax, Hkv, hd)
@@ -95,8 +120,13 @@ def cache_pspec_tree(cfg, mesh, caches):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def serve_cache_pspecs(cfg, mesh, batch: int, max_len: int):
-    caches = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+def serve_cache_pspecs(cfg, mesh, batch: int, max_len: int, *,
+                       paged: bool = False, page_size: int = 16,
+                       num_pages: int | None = None):
+    caches = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, paged=paged,
+                             page_size=page_size, num_pages=num_pages)
+    )
     return cache_pspec_tree(cfg, mesh, caches)
 
 
@@ -124,54 +154,148 @@ def make_decode_step(cfg, mesh):
     return decode_step
 
 
-def make_serve_decode_step(cfg, mesh):
+def _sample_tokens(logits, rng_keys, positions, *, greedy, temperature,
+                   top_k, vocab):
+    """On-device next-token selection for a batch of slots.
+
+    logits: (N, V); rng_keys: (N, 2) uint32 per-slot base keys; positions:
+    (N,) int32 — the position whose logits are being sampled. Greedy (the
+    default) is a plain argmax, bitwise identical to the historical
+    behavior. Otherwise temperature (and optionally top-k) sampling with
+    the key ``fold_in(rng_keys[i], positions[i])`` — STATELESS per step,
+    so a request's sampled stream is a pure function of (params, prompt,
+    slot, sample_seed): it cannot depend on co-resident requests' decode
+    traffic, the overlap schedule, or who occupied the slot before.
+    Padded vocab ids are masked out. Returns tokens (N,) int32."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    use = jax.vmap(jax.random.fold_in)(rng_keys, positions)
+    lg = logits.astype(jnp.float32) / max(float(temperature), 1e-6)
+    V = lg.shape[-1]
+    if vocab < V:
+        lg = jnp.where(jnp.arange(V)[None, :] < vocab, lg, -jnp.inf)
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[:, -int(top_k)][:, None]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    return jax.vmap(jax.random.categorical)(use, lg).astype(jnp.int32)
+
+
+def make_serve_decode_step(cfg, mesh, *, paged=False, greedy=True,
+                           temperature=1.0, top_k=None):
     """Continuous-batching decode: per-slot positions + active mask.
 
     Inactive slots (empty, or mid-prefill — their cache lines belong to the
     concurrently dispatched prefill chunks) neither write the KV cache nor
-    advance recurrent state; their sampled tokens are garbage and ignored."""
+    advance recurrent state; their sampled tokens are garbage and ignored.
+    ``paged=True`` adds a ``block_tables`` argument routing attention-cache
+    writes and reads through the shared page pool."""
     lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+    sample = functools.partial(
+        _sample_tokens, greedy=greedy, temperature=temperature, top_k=top_k,
+        vocab=cfg.vocab,
+    )
 
-    def decode_step(params, tokens, pos, active, caches):
-        """tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool."""
-        logits, new_caches = T.decode_step(
-            params, tokens, pos, cfg, caches, lc, active=active
-        )
-        next_tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
-        return next_tok, new_caches
+    if paged:
+        def decode_step(params, tokens, pos, active, caches, block_tables,
+                        rng_keys):
+            """tokens: (B,1); pos: (B,); active: (B,) bool; block_tables:
+            (B, n_logical) int32; rng_keys: (B,2) uint32 (static per slot
+            — the sampling key is folded with the position)."""
+            logits, new_caches = T.decode_step(
+                params, tokens, pos, cfg, caches, lc, active=active,
+                block_tables=block_tables,
+            )
+            pos_v = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), logits.shape[:1])
+            tok = sample(logits, rng_keys, pos_v)
+            return tok[:, None], new_caches
+    else:
+        def decode_step(params, tokens, pos, active, caches, rng_keys):
+            """tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool."""
+            logits, new_caches = T.decode_step(
+                params, tokens, pos, cfg, caches, lc, active=active
+            )
+            pos_v = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), logits.shape[:1])
+            tok = sample(logits, rng_keys, pos_v)
+            return tok[:, None], new_caches
 
     return decode_step
 
 
-def make_prefill_chunk_step(cfg, mesh):
+def _is_paged_leaf(path) -> bool:
+    return "pages" in _cache_path_name(path)
+
+
+def make_prefill_chunk_step(cfg, mesh, *, paged=False, greedy=True,
+                            temperature=1.0, top_k=None):
     """One chunk of one request's prompt into ONE slot's cache lines.
 
-    The slot's rows are sliced out of the stacked cache pytree, run through
-    ``T.prefill_chunk`` at batch 1, and scattered back — the other slots'
-    lines pass through untouched, which is what makes it safe to interleave
-    with in-flight decode dispatches."""
+    The slot's recurrent-state rows are sliced out of the stacked cache
+    pytree, run through ``T.prefill_chunk`` at batch 1, and scattered back —
+    the other slots' state passes through untouched. Paged attention pools
+    are passed whole: the chunk writes only the pages its block-table row
+    owns, so it commutes with in-flight decode dispatches exactly like the
+    dense slot-sliced write does."""
     lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+    sample = functools.partial(
+        _sample_tokens, greedy=greedy, temperature=temperature, top_k=top_k,
+        vocab=cfg.vocab,
+    )
 
-    def chunk_step(params, tokens, start, length, slot, caches):
+    def _slot_slice(caches, slot):
+        flat = jax.tree_util.tree_flatten_with_path(caches)
+        leaves = [
+            leaf if _is_paged_leaf(path)
+            else jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+            for path, leaf in flat[0]
+        ]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(caches), leaves
+        )
+
+    def _scatter_back(caches, new_slot, slot):
+        flat_full = jax.tree_util.tree_flatten_with_path(caches)
+        flat_new = jax.tree_util.tree_leaves(new_slot)
+        leaves = [
+            upd if _is_paged_leaf(path)
+            else jax.lax.dynamic_update_slice_in_dim(
+                full, upd.astype(full.dtype), slot, axis=1
+            )
+            for (path, full), upd in zip(flat_full[0], flat_new)
+        ]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(caches), leaves
+        )
+
+    def chunk_step(params, tokens, start, length, slot, caches, block_tables,
+                   rng_keys):
         """tokens: (1,C) int32 (padded); start/length: (1,) int32;
-        slot: () int32; caches: full stacked tree. Returns
-        (next_tok (1,) — argmax at the last valid position, new_caches)."""
-        slot_caches = jax.tree_util.tree_map(
-            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), caches
+        slot: () int32; caches: full stacked tree; block_tables: the full
+        (B, n_logical) table (or None when dense); rng_keys: (B,2) static
+        per-slot base keys. Returns (next_tok (1,) sampled at the last
+        valid position, new_caches)."""
+        slot_caches = _slot_slice(caches, slot)
+        tbl_row = (
+            jax.lax.dynamic_slice_in_dim(block_tables, slot, 1, axis=0)
+            if paged else None
         )
         logits, new_slot = T.prefill_chunk(
-            params, {"tokens": tokens}, cfg, slot_caches, start, length, lc
+            params, {"tokens": tokens}, cfg, slot_caches, start, length, lc,
+            block_tables=tbl_row,
         )
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        new_caches = jax.tree_util.tree_map(
-            lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
-                full, upd.astype(full.dtype), slot, axis=1
-            ),
-            caches, new_slot,
-        )
+        key_row = jax.lax.dynamic_slice_in_dim(rng_keys, slot, 1, axis=0)
+        next_tok = sample(logits, key_row, start + length - 1)
+        new_caches = _scatter_back(caches, new_slot, slot)
         return next_tok, new_caches
 
-    return chunk_step
+    if paged:
+        return chunk_step
+
+    def chunk_step_dense(params, tokens, start, length, slot, caches,
+                         rng_keys):
+        return chunk_step(params, tokens, start, length, slot, caches, None,
+                          rng_keys)
+
+    return chunk_step_dense
 
 
 def make_encoder_step(cfg, mesh):
@@ -190,15 +314,54 @@ def make_encoder_step(cfg, mesh):
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
-def _serve_step_fns(cfg, mesh):
-    """Shared jitted (decode, prefill-chunk) pair per (cfg, mesh): scheduler
-    instances (restarts, A/B benchmark runs) reuse traces instead of paying
-    a fresh compile each."""
+# Bounded: each entry pins a pair of jitted fns with donated-buffer traces
+# for the process lifetime, so an unbounded cache grows without limit when
+# tests/benchmarks construct many scheduler configurations. 8 entries cover
+# every concurrent A/B pattern in the repo (paged/dense x sampling x arch);
+# an evicted entry merely recompiles on the next scheduler construction.
+@functools.lru_cache(maxsize=8)
+def _serve_step_fns(cfg, mesh, paged, greedy, temperature, top_k):
+    """Shared jitted (decode, prefill-chunk) pair per (cfg, mesh, serve
+    statics): scheduler instances (restarts, A/B benchmark runs) reuse
+    traces instead of paying a fresh compile each."""
+    kw = dict(paged=paged, greedy=greedy, temperature=temperature, top_k=top_k)
     return (
-        jax.jit(make_serve_decode_step(cfg, mesh), donate_argnums=(4,)),
-        jax.jit(make_prefill_chunk_step(cfg, mesh), donate_argnums=(5,)),
+        jax.jit(make_serve_decode_step(cfg, mesh, **kw), donate_argnums=(4,)),
+        jax.jit(make_prefill_chunk_step(cfg, mesh, **kw), donate_argnums=(5,)),
     )
+
+
+class PageAllocator:
+    """Free-list allocator over the shared KV page pool.
+
+    Pages are plain integers into the pool's page axis; the scheduler owns
+    the per-slot block tables. ``alloc`` raises a clean error on exhaustion
+    *before* any index is handed out — a full pool can never silently remap
+    a neighbor's pages."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))  # pop() -> page 0 first
+        self.peak_used = 0
+
+    @property
+    def used(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int, *, owner=None) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"paged KV pool exhausted: request {owner!r} needs {n} more "
+                f"page(s) but only {len(self._free)} of {self.num_pages} are "
+                f"free; raise ServeConfig.num_pages (--num-pages) or retire "
+                f"requests sooner"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.used)
+        return pages
+
+    def release(self, pages: list[int]) -> None:
+        self._free.extend(pages)
 
 
 class BatchScheduler:
@@ -219,6 +382,24 @@ class BatchScheduler:
     Reattaching a freed slot restores its recurrent-state carries to their
     initial values (stale attention KV is already masked by the visible
     window), so a reused slot behaves exactly like a fresh one.
+
+    Attention KV lives in a **paged cache** by default (``scfg.paged``): a
+    shared pool of ``page_size``-token pages plus a per-slot block table.
+    Pages are allocated exactly as prefill chunks / decode steps write them
+    and freed when the request retires, so KV HBM scales with *live tokens*
+    instead of ``batch x max_len``; decode attention gathers K/V through
+    the table (``kernels.paged_attention`` — Pallas on TPU, a gather oracle
+    elsewhere that is bitwise identical to the dense layout). Exhausting
+    the pool raises a clean error before any page is handed out —
+    neighbors' pages are never remapped. ``paged=False`` keeps the dense
+    layout; generated tokens are bitwise identical either way.
+
+    Sampling: greedy argmax by default (bitwise-stable). With
+    ``greedy=False``, temperature/top-k sampling runs inside the decode and
+    prefill-chunk steps from per-slot base PRNG keys carried on device,
+    folded with the sampled position each step (stateless — nothing to
+    reset on slot reuse) — a request's stream depends only on (params,
+    prompt, slot, sample_seed).
 
     Token readback is **deferred and batched**: decode steps and prefill
     completions append on-device token arrays to a pending list, and one
@@ -250,12 +431,20 @@ class BatchScheduler:
                     f"prefill_chunk={scfg.prefill_chunk} must be <= the "
                     f"recurrent chunk {inner} or a multiple of it"
                 )
+        if scfg.paged and scfg.max_len % scfg.page_size:
+            raise ValueError(
+                f"paged serving needs max_len ({scfg.max_len}) divisible by "
+                f"page_size ({scfg.page_size}) so the paged and dense layouts "
+                f"stay bitwise interchangeable"
+            )
         # default: off, but env-activatable (TALP_ENABLE=1) like every other
         # entry point; the caller owns finalize() (also via self.session)
         self.session = session if session is not None else PerfSession(
             SessionConfig(app_name="serve", backend="null")
         )
-        decode_fn, prefill_fn = _serve_step_fns(cfg, mesh)
+        decode_fn, prefill_fn = _serve_step_fns(
+            cfg, mesh, scfg.paged, scfg.greedy, scfg.temperature, scfg.top_k
+        )
         self.decode = self.session.wrap_step(
             decode_fn,
             region="decode",
@@ -272,7 +461,36 @@ class BatchScheduler:
             num_devices=mesh.devices.size,
             observe=lambda out: {"outputs": out[0]},
         )
-        self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
+        # paged KV: shared pool + per-slot block tables + free-list
+        # allocator. Tables are host-authored (numpy, -1 = unallocated) and
+        # mirrored to device lazily — one small upload per tick at most,
+        # only when an allocation or a free actually changed them.
+        if scfg.paged:
+            self._max_pages = scfg.max_len // scfg.page_size
+            n_pages = scfg.num_pages
+            if n_pages is None:
+                n_pages = scfg.batch * self._max_pages
+            self._alloc: PageAllocator | None = PageAllocator(n_pages)
+            self._tables = np.full((scfg.batch, self._max_pages), -1, np.int32)
+            self._slot_pages: list[list[int]] = [[] for _ in range(scfg.batch)]
+            self._tables_dirty = True
+            self._tables_dev = None
+            self.caches = T.init_cache(
+                cfg, scfg.batch, scfg.max_len, paged=True,
+                page_size=scfg.page_size, num_pages=n_pages,
+            )
+        else:
+            self._alloc = None
+            self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
+        # per-slot sampling base keys, carried on device and STATIC for the
+        # scheduler's lifetime: each sampling step folds the slot's key with
+        # the sampled position, so a request's stream is a pure function of
+        # (params, prompt, slot, sample_seed) — independent of co-resident
+        # traffic, the overlap schedule, and previous slot occupants
+        # (greedy never reads them)
+        self.rng_keys = jax.random.split(
+            jax.random.PRNGKey(scfg.sample_seed), scfg.batch
+        )
         # fresh-state template for slot reuse: unlike attention KV (stale
         # lines are masked by cache_len/kv_len), recurrent state has no
         # positional masking, so a reattached slot must have its carries
@@ -373,20 +591,88 @@ class BatchScheduler:
         """Restore reused slots' recurrent-state cache rows (SSM/conv/xLSTM
         carries) to their initial values before the new request runs.
         Attention KV needs no reset — stale lines never enter the visible
-        window — but recurrent state carries unconditionally, so without
-        this the first prefill chunk (or decode step) of a reattached slot
-        would continue from the retired request's final state."""
+        window (dense: cache_len masking; paged: freed pages leave the
+        block table) — and the sampling keys are stateless (folded with
+        the position per step), but recurrent state carries
+        unconditionally, so without this the first prefill chunk (or
+        decode step) of a reattached slot would continue from the retired
+        request's final state."""
         if not self._has_recurrent:
             return
         idx = jnp.asarray(slots, jnp.int32)
-        flat, treedef = jax.tree_util.tree_flatten(self.caches)
         with compat.use_mesh(self.mesh):
+            flat, treedef = jax.tree_util.tree_flatten(self.caches)
             leaves = [
                 leaf if fresh is None
                 else leaf.at[:, idx].set(fresh.astype(leaf.dtype))
                 for leaf, fresh in zip(flat, self._fresh_state)
             ]
         self.caches = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- paged-pool bookkeeping ------------------------------------------
+
+    def _ensure_pages(self, slot: int, last_pos: int, owner) -> None:
+        """Grow ``slot``'s block table so position ``last_pos`` (inclusive)
+        is backed by a physical page; no-op when already covered (and in
+        dense mode)."""
+        if self._alloc is None:
+            return
+        need = last_pos // self.scfg.page_size + 1
+        have = len(self._slot_pages[slot])
+        if need <= have:
+            return
+        new = self._alloc.alloc(need - have, owner=owner)
+        self._tables[slot, have:need] = new
+        self._slot_pages[slot].extend(new)
+        self._tables_dirty = True
+
+    def _release_slot_pages(self, slot: int) -> None:
+        if self._alloc is None or not self._slot_pages[slot]:
+            return
+        self._alloc.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._tables[slot, :] = -1
+        self._tables_dirty = True
+
+    def _tables_device(self):
+        """Device mirror of the block tables. ``-1`` sentinels are uploaded
+        intact: every read path clips them to page 0 (and masks by
+        cache_len), while the write path's ``phys_page >= 0`` guard drops
+        any write to an unallocated page — a scheduler bug can then never
+        scribble on whoever owns physical page 0. The ``.copy()`` matters:
+        a zero-copy upload would alias the host table the allocator
+        mutates under in-flight dispatches."""
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(self._tables.copy())
+            self._tables_dirty = False
+        return self._tables_dev
+
+    def kv_cache_stats(self) -> dict:
+        """KV-memory accounting for benchmarks and reports.
+
+        ``kv_bytes`` is the attention-cache HBM footprint as allocated
+        (dense: the full (B, max_len) buffers; paged: the pool). Paged
+        additionally reports live-token peaks and pool utilization."""
+        attn_bytes = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.caches)[0]:
+            name = _cache_path_name(path)
+            if "attn" in name:
+                attn_bytes += leaf.size * leaf.dtype.itemsize
+        out = {"layout": "paged" if self.scfg.paged else "dense",
+               "kv_bytes": int(attn_bytes)}
+        if self._alloc is not None:
+            per_page = attn_bytes / max(self._alloc.num_pages, 1)
+            out.update(
+                page_size=self.scfg.page_size,
+                num_pages=self._alloc.num_pages,
+                pages_in_use=self._alloc.used,
+                peak_used_pages=self._alloc.peak_used,
+                peak_live_kv_bytes=int(self._alloc.peak_used * per_page),
+                pool_utilization=round(
+                    self._alloc.peak_used / max(self._alloc.num_pages, 1), 4
+                ),
+            )
+        return out
 
     def _dispatch_prefill_chunk(self) -> None:
         """Dispatch one ``prefill_chunk``-token chunk for the oldest
@@ -397,11 +683,17 @@ class BatchScheduler:
         L = min(C, len(prompt) - start)
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :L] = prompt[start : start + L]
-        next_tok, self.caches = self.prefill(
+        args = (
             self.params, jnp.asarray(chunk),
             jnp.asarray([start], jnp.int32), jnp.asarray([L], jnp.int32),
             jnp.asarray(task["slot"], jnp.int32), self.caches,
         )
+        if self.scfg.paged:
+            # back the chunk's positions [start, start+L) with pool pages
+            # before anything writes them
+            self._ensure_pages(task["slot"], start + L - 1, task["req"]["id"])
+            args += (self._tables_device(),)
+        next_tok, self.caches = self.prefill(*args, self.rng_keys)
         task["done"] = start + L
         self.stats["prefill_chunks"] += 1
         if task["done"] >= len(prompt):
@@ -459,6 +751,7 @@ class BatchScheduler:
             if done:
                 self.completed.append(req)
                 self.active[slot] = None
+                self._release_slot_pages(slot)
 
     def drain(self) -> None:
         """Finish in-flight (partial) prefills and flush outstanding
@@ -493,9 +786,26 @@ class BatchScheduler:
                 self.stats["overlap_ticks"] += 1
             if any(r is not None for r in decoding):
                 active = np.asarray([r is not None for r in decoding])
+                if self.scfg.paged:
+                    # this step writes each active slot's K/V at pos[slot]:
+                    # back any page boundary being crossed first
+                    for slot, req in enumerate(decoding):
+                        if req is not None:
+                            self._ensure_pages(
+                                slot, int(self.pos[slot]), req["id"]
+                            )
+                    args = (jnp.asarray(active), self.caches,
+                            self._tables_device())
+                else:
+                    args = (jnp.asarray(active), self.caches)
+                # snapshot pos: jnp.asarray can zero-copy alias an aligned
+                # numpy buffer on CPU, and the async decode would then read
+                # the ``self.pos`` mutations below (and next tick's attach
+                # resets) instead of this tick's values
+                pos_now = jnp.asarray(self.pos.copy())
                 self.tokens, self.caches = self.decode(
-                    self.params, self.tokens, jnp.asarray(self.pos),
-                    jnp.asarray(active), self.caches,
+                    self.params, self.tokens, pos_now,
+                    *args, self.rng_keys,
                 )
                 self.stats["decode_steps"] += 1
                 if self.stats["prefill_chunks"] > chunks_at_tick_start:

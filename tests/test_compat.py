@@ -232,6 +232,43 @@ def test_no_version_gated_jax_access_outside_compat():
     assert not offenders, f"version-gated JAX access outside compat.py: {offenders}"
 
 
+def test_pallas_imported_only_via_compat():
+    """Kernel code (flash_attention, rmsnorm, paged_attention, and whatever
+    comes next) reaches the Pallas modules through ``compat.pallas()`` /
+    ``compat.pallas_tpu()`` — the experimental namespace moves between JAX
+    releases and may be absent on minimal builds, so the import is a
+    version-gated access like any other and lives only in compat.py."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    gated = re.compile(
+        r"from\s+jax\.experimental\s+import\s+pallas|jax\.experimental\.pallas"
+    )
+    offenders = []
+    for sub in ("src", "benchmarks", "examples", "tests"):
+        for p in (root / sub).rglob("*.py"):
+            if p.name in ("compat.py", "test_compat.py"):
+                continue
+            if gated.search(p.read_text()):
+                offenders.append(str(p.relative_to(root)))
+    assert not offenders, f"Pallas imported outside compat.py: {offenders}"
+
+
+def test_pallas_accessors_raise_informatively_when_absent(monkeypatch):
+    monkeypatch.setattr(compat, "_pallas_mod", None)
+    monkeypatch.setattr(compat, "_pallas_tpu_mod", None)
+    with pytest.raises(ImportError, match="reference"):
+        compat.pallas()
+    with pytest.raises(ImportError, match="reference"):
+        compat.pallas_tpu()
+
+
+def test_pallas_accessors_return_modules_when_present():
+    if not compat.HAS_PALLAS:
+        pytest.skip("no Pallas in this JAX build")
+    assert hasattr(compat.pallas(), "pallas_call")
+    if compat.HAS_PALLAS_TPU:
+        assert hasattr(compat.pallas_tpu(), "PrefetchScalarGridSpec")
+
+
 # ---------------------------------------------------------------------------
 # policy: one instrumentation surface — collectors are constructed only
 # behind the repro.session facade (same grep style as the compat rule)
