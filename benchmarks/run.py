@@ -14,9 +14,12 @@ Prints ``name,us_per_call,derived`` CSV lines.
 ``analyze_hlo`` timing assertion (so the HLO parse cache cannot silently
 regress even if the equivalent unit test is edited away) plus the cheap
 shape of ``benchmarks/serve_throughput.py`` (paged and dense KV layouts
-must keep producing identical tokens, overlapped chunked prefill must keep
-producing identical tokens with no decode gap while prefilling, and the
-paged pool footprint must stay strictly below the dense buffers).
+must keep producing identical tokens — greedy AND sampled — overlapped
+chunked prefill must keep producing identical tokens with no decode gap
+while prefilling, the paged pool footprint must stay strictly below the
+dense buffers, and cross-request prefix sharing must keep tokens bitwise
+identical on/off in both decode modes while strictly lowering peak live
+pages and skipping prefill chunks).
 """
 
 from __future__ import annotations

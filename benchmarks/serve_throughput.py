@@ -19,11 +19,20 @@ dense+overlapped — and measures what the ISSUE's acceptance criteria name:
                         dispatched a decode (no gap > one tick)
   identical tokens      paged == dense, and overlap on/off, token for token
 
+A fourth section runs the shared-prefix workload (one long system prompt,
+divergent tails) with the cross-request prefix cache on vs off on the SAME
+warm-first schedule, reporting TTFT, tokens/sec, peak live pages and the
+prefill chunks the trie hits skipped — plus bitwise token identity between
+the two sides.
+
 Emits ``BENCH_serve.json`` (default ``results/BENCH_serve.json``) so the
 repo carries a serve-path perf trajectory next to the TALP records; the
 ``--check`` shape in ``benchmarks/run.py`` runs the tiny variant and
-asserts paged/dense token identity, the overlap guarantee, and that the
-paged pool footprint lands strictly below dense for the mixed-length trace.
+asserts paged/dense token identity (greedy AND sampled), the overlap
+guarantee, that the paged pool footprint lands strictly below dense for
+the mixed-length trace, and that prefix sharing keeps tokens bitwise
+identical (greedy AND sampled) while strictly lowering peak live pages
+and skipping prefill chunks.
 
     PYTHONPATH=src:. python benchmarks/serve_throughput.py [arch ...]
 
@@ -41,6 +50,10 @@ import time
 from benchmarks.common import RESULTS_DIR, csv_line
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=4)
 def _build(cfg_name: str = "tinyllama-1.1b"):
     import jax
 
@@ -67,8 +80,15 @@ def _request_trace(cfg, n_requests: int, seed: int = 0):
 def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
              batch: int, prefill_chunk: int, max_len: int = 128,
              paged: bool = True, page_size: int = 16,
-             num_pages: int | None = None) -> dict:
-    """One scheduler pass; returns the measured dict for BENCH_serve.json."""
+             num_pages: int | None = None, prefix_cache: bool = False,
+             greedy: bool = True, temperature: float = 1.0,
+             top_k: int | None = None, warm_first: bool = False) -> dict:
+    """One scheduler pass; returns the measured dict for BENCH_serve.json.
+
+    ``warm_first`` runs ``prompts[0]`` to completion before the rest are
+    submitted — the shared-prefix A/B schedule: the first request warms
+    the prefix trie, then the wave attaches against it (the no-sharing
+    pass runs the SAME schedule so the comparison is honest)."""
     from repro import compat
     from repro.serve.serve import BatchScheduler, ServeConfig
 
@@ -78,13 +98,17 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
             ServeConfig(max_len=max_len, batch=batch,
                         prefill_chunk=prefill_chunk, overlap=overlap,
                         paged=paged, page_size=page_size,
-                        num_pages=num_pages),
+                        num_pages=num_pages, prefix_cache=prefix_cache,
+                        greedy=greedy, temperature=temperature, top_k=top_k),
             params,
         )
-        # stagger: half the requests arrive while the first half decodes,
-        # so prefill-on-attach genuinely competes with in-flight decode
-        half = max(1, len(prompts) // 2)
-        first, late = prompts[:half], prompts[half:]
+        if warm_first:
+            first, late = prompts[:1], prompts[1:]
+        else:
+            # stagger: half the requests arrive while the first half decodes,
+            # so prefill-on-attach genuinely competes with in-flight decode
+            half = max(1, len(prompts) // 2)
+            first, late = prompts[:half], prompts[half:]
         t0 = time.perf_counter()
         submit_t: dict = {}
         for rid, p in enumerate(first):
@@ -96,7 +120,9 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
         ticks = 0
         injected = False
         while len(sched.completed) < len(prompts) and ticks < 50 * max_new:
-            if not injected and ticks >= 2:
+            inject_due = (len(sched.completed) >= len(first)) if warm_first \
+                else (ticks >= 2)
+            if not injected and inject_due:
                 for rid, p in enumerate(late, start=len(first)):
                     sched.submit(p, request_id=rid, max_new=max_new)
                     submit_t[rid] = time.perf_counter()
@@ -143,6 +169,73 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
     }
 
 
+def _shared_prefix_trace(cfg, n_requests: int, prefix_len: int,
+                         seed: int = 0):
+    """N requests sharing a long system prompt, divergent short tails.
+
+    ``prefix_len`` should be a page multiple: the shared pages then skip
+    whole prefill chunks on the same chunk grid the cold path uses, which
+    keeps the sharing-on/off token identity bitwise even in bf16 (mid-page
+    divergence — the copy-on-write path — is exercised at f32 in
+    tests/test_serve.py)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    system = rng.integers(4, cfg.vocab, size=prefix_len).tolist()
+    return [system + rng.integers(4, cfg.vocab, size=int(n)).tolist()
+            for n in rng.integers(3, 11, size=n_requests)]
+
+
+def run_prefix(cfg, mesh, params, *, n_requests: int, prefix_len: int,
+               max_new: int, batch: int, prefill_chunk: int, max_len: int,
+               page_size: int, greedy: bool = True, temperature: float = 1.0,
+               top_k: int | None = None) -> dict:
+    """Shared-prefix workload, sharing on vs off (same warm-first schedule:
+    request 0 completes — and, with sharing on, warms the trie — before the
+    wave attaches). Returns the A/B with TTFT, tokens/sec and peak live
+    pages per side."""
+    prompts = _shared_prefix_trace(cfg, n_requests, prefix_len)
+    num_pages = _workload_pages(prompts, max_new, batch, page_size)
+    kw = dict(overlap=True, max_new=max_new, batch=batch,
+              prefill_chunk=prefill_chunk, max_len=max_len,
+              page_size=page_size, num_pages=num_pages, warm_first=True,
+              greedy=greedy, temperature=temperature, top_k=top_k)
+    # warmup: compile both sides' step functions (the prefix_cache=True pair
+    # is a distinct jit key — without this the sharing-on pass would pay
+    # compilation inside its timed region and the TTFT columns would lie)
+    for pc in (True, False):
+        run_mode(cfg, mesh, params, prompts[:2], prefix_cache=pc,
+                 **{**kw, "max_new": 2})
+    on = run_mode(cfg, mesh, params, prompts, prefix_cache=True, **kw)
+    off = run_mode(cfg, mesh, params, prompts, prefix_cache=False, **kw)
+    gen_on, gen_off = on.pop("generated"), off.pop("generated")
+    return {
+        "config": {"requests": n_requests, "prefix_len": prefix_len,
+                   "max_new": max_new, "batch": batch,
+                   "prefill_chunk": prefill_chunk, "max_len": max_len,
+                   "page_size": page_size, "num_pages": num_pages,
+                   "greedy": greedy},
+        # sharing on/off bitwise token identity (a shared page holds exactly
+        # the K/V the request would have prefilled itself)
+        "identical_tokens": gen_on == gen_off,
+        # the memory win: strictly fewer live pages at peak, trie pins and
+        # all, because the wave's prefix pages exist once instead of B times
+        "peak_pages_below_no_sharing": (
+            on["kv"]["peak_used_pages"] < off["kv"]["peak_used_pages"]
+        ),
+        # the compute win, deterministically (no wall-clock jitter): shared
+        # prefix pages skip their prefill chunks outright
+        "prefill_chunks_saved": (
+            off["stats"]["prefill_chunks"] - on["stats"]["prefill_chunks"]
+        ),
+        "ttft_mean_speedup": round(
+            off["ttft_mean_s"] / max(on["ttft_mean_s"], 1e-9), 3
+        ),
+        "sharing_on": on,
+        "sharing_off": off,
+    }
+
+
 def _workload_pages(prompts, max_new: int, batch: int, page_size: int) -> int:
     """Pool size for the trace: every concurrently-resident request (at most
     ``batch``) fully extended — the honest paged footprint, well below the
@@ -171,6 +264,14 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
                         num_pages=num_pages, **kw)
     dense_ov = run_mode(cfg, mesh, params, prompts, overlap=True, paged=False,
                         **kw)
+    # shared-prefix A/B: longest page-aligned system prompt that still leaves
+    # room for the divergent tail + generation inside max_len
+    prefix_len = max(page_size,
+                     ((max_len // 2 - max_new) // page_size) * page_size)
+    prefix = run_prefix(cfg, mesh, params, n_requests=n_requests,
+                        prefix_len=prefix_len, max_new=max_new, batch=batch,
+                        prefill_chunk=prefill_chunk, max_len=max_len,
+                        page_size=page_size)
     gen_po, gen_ps = paged_ov.pop("generated"), paged_sw.pop("generated")
     gen_do = dense_ov.pop("generated")
     ostats = paged_ov["stats"]
@@ -203,6 +304,7 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
         "paged_overlap": paged_ov,
         "paged_stop_world": paged_sw,
         "dense_overlap": dense_ov,
+        "prefix": prefix,
     }
 
 
@@ -238,12 +340,51 @@ def check(out_path: str | None = None) -> str:
             f"overlap did not beat stop-the-world on decode stall: "
             f"{ov['decode_max_gap_s']}s >= {sw['decode_max_gap_s']}s"
         )
+    prefix = result["prefix"]
+    if not prefix["identical_tokens"]:
+        raise AssertionError(
+            "prefix sharing changed generated tokens vs the cold path (greedy)"
+        )
+    if not prefix["peak_pages_below_no_sharing"]:
+        raise AssertionError(
+            "prefix sharing did not reduce peak live pages: "
+            f"on={prefix['sharing_on']['kv']['peak_used_pages']} vs "
+            f"off={prefix['sharing_off']['kv']['peak_used_pages']}"
+        )
+    if prefix["prefill_chunks_saved"] <= 0:
+        raise AssertionError(
+            "prefix sharing skipped no prefill chunks: "
+            f"{prefix['prefill_chunks_saved']}"
+        )
+    # sampling must be sharing-invariant too (per-slot streams are keyed on
+    # absolute position, not on how the KV for earlier positions got there)
+    cfg, mesh, params = _build()
+    sampled = run_prefix(cfg, mesh, params, n_requests=3, prefix_len=16,
+                         max_new=6, batch=2, prefill_chunk=4, max_len=64,
+                         page_size=16, greedy=False, temperature=0.8, top_k=5)
+    if not sampled["identical_tokens"]:
+        raise AssertionError(
+            "prefix sharing changed sampled tokens (temperature=0.8, top_k=5)"
+        )
+    # ...and the S>1 paged prefill read must match the dense layout under
+    # sampling as well as greedy (the greedy case is gated above)
+    sprompts = _request_trace(cfg, 3)
+    skw = dict(overlap=True, max_new=6, batch=2, prefill_chunk=4, max_len=64,
+               page_size=16, greedy=False, temperature=0.8, top_k=5)
+    spaged = run_mode(cfg, mesh, params, sprompts, paged=True,
+                      num_pages=_workload_pages(sprompts, 6, 2, 16), **skw)
+    sdense = run_mode(cfg, mesh, params, sprompts, paged=False, **skw)
+    if spaged["generated"] != sdense["generated"]:
+        raise AssertionError(
+            "paged KV cache changed sampled tokens vs the dense layout"
+        )
     _save(result, out_path)
     return csv_line(
         "check_serve_paged",
         ov["wall_s"] * 1e6 / max(ov["ticks"], 1),
         f"tok/s={ov['tokens_per_sec']};kv_savings={result['kv']['savings_ratio']}x;"
-        f"pool_util={result['kv']['paged']['pool_utilization']}",
+        f"pool_util={result['kv']['paged']['pool_utilization']};"
+        f"prefix_chunks_saved={prefix['prefill_chunks_saved']}",
     )
 
 
@@ -262,6 +403,8 @@ def _save(result: dict, out_path: str | None = None) -> str:
 def _lines(result: dict, path: str) -> list[str]:
     po, do = result["paged_overlap"], result["dense_overlap"]
     sw = result["paged_stop_world"]
+    pf = result["prefix"]
+    pon, poff = pf["sharing_on"], pf["sharing_off"]
     tag = result["arch"]
     return [
         csv_line(f"serve_paged_overlap[{tag}]",
@@ -280,6 +423,19 @@ def _lines(result: dict, path: str) -> list[str]:
                  f"paged_matches_dense={result['paged_matches_dense']};"
                  f"no_decode_gap={result['overlap_no_decode_gap']};"
                  f"kv_savings={result['kv']['savings_ratio']}x;json={path}"),
+        csv_line(f"serve_prefix_sharing_on[{tag}]",
+                 pon["wall_s"] * 1e6 / max(pon["ticks"], 1),
+                 f"tok/s={pon['tokens_per_sec']};ttft={pon['ttft_mean_s']}s;"
+                 f"peak_pages={pon['kv']['peak_used_pages']}"),
+        csv_line(f"serve_prefix_sharing_off[{tag}]",
+                 poff["wall_s"] * 1e6 / max(poff["ticks"], 1),
+                 f"tok/s={poff['tokens_per_sec']};ttft={poff['ttft_mean_s']}s;"
+                 f"peak_pages={poff['kv']['peak_used_pages']}"),
+        csv_line(f"serve_prefix_identity[{tag}]", 0.0,
+                 f"identical={pf['identical_tokens']};"
+                 f"peak_pages_below={pf['peak_pages_below_no_sharing']};"
+                 f"prefill_chunks_saved={pf['prefill_chunks_saved']};"
+                 f"ttft_speedup={pf['ttft_mean_speedup']}x"),
     ]
 
 

@@ -5,6 +5,11 @@ record suitable for the same CI report as training runs.
 
     PYTHONPATH=src python examples/serve_batch.py            # paged (default)
     PYTHONPATH=src python examples/serve_batch.py --dense    # dense baseline
+    PYTHONPATH=src python examples/serve_batch.py --shared-prefix
+        # cross-request prefix cache: requests share a system prompt whose
+        # KV pages are prefilled once and mapped into every later request's
+        # block table (copy-on-write at the divergence point); the demo
+        # prints pages saved and prefill tokens skipped
 
 The paged layout (``ServeConfig.paged``, the ``--paged`` default here and
 in ``repro.launch.serve``) keeps attention KV in a shared pool of
@@ -43,6 +48,9 @@ from repro.serve.serve import BatchScheduler, ServeConfig
 
 def main():
     paged = "--dense" not in sys.argv[1:]
+    shared_prefix = "--shared-prefix" in sys.argv[1:]
+    if shared_prefix and not paged:
+        raise SystemExit("--shared-prefix needs the paged layout")
     cfg = smoke_config("tinyllama-1.1b")
     mesh = make_host_mesh()
     params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
@@ -58,14 +66,21 @@ def main():
         sched = BatchScheduler(
             cfg, mesh,
             # pool sized to the workload: 4 slots x ceil((10+8)/16) pages,
-            # vs the dense equivalent of 4 x 128/16 = 32 pages
+            # vs the dense equivalent of 4 x 128/16 = 32 pages (the shared-
+            # prefix run carries 48 extra prompt tokens per request, shared
+            # after the first — plus the trie's pinned copy)
             ServeConfig(max_len=128, batch=4, prefill_chunk=16,
                         paged=paged, page_size=16,
-                        num_pages=8 if paged else None),
+                        num_pages=(16 if shared_prefix else 8) if paged else None,
+                        prefix_cache=shared_prefix),
             params, session=session,
         )
+        # --shared-prefix: one 48-token system prompt, divergent user tails
+        system = (rng.integers(4, cfg.vocab, size=48).tolist()
+                  if shared_prefix else [])
         for rid in range(10):
-            prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
+            prompt = system + rng.integers(4, cfg.vocab,
+                                           size=rng.integers(3, 10)).tolist()
             sched.submit(prompt, request_id=rid, max_new=8)
         steps = 0
         while len(sched.completed) < 10 and steps < 200:
@@ -83,6 +98,12 @@ def main():
               f"({kv['num_pages']} pages x {kv['page_size']} tokens), "
               f"peak {kv['peak_used_pages']} pages live, "
               f"utilization {kv['pool_utilization']}")
+        if "prefix_cache" in kv:
+            pc = kv["prefix_cache"]
+            print(f"prefix cache: {pc['pages_saved_by_sharing']} pages saved "
+                  f"by sharing, {pc['prefill_tokens_skipped']} prefill tokens "
+                  f"skipped, hit rate {pc['hit_rate']} "
+                  f"({pc['cow_copies']} copy-on-write pages)")
     else:
         print(f"dense KV cache: {kv['kv_bytes']} bytes")
     for req in sched.completed[:3]:

@@ -1,5 +1,13 @@
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (
+    paged_attention,
+    paged_prefill_attention,
+)
 from repro.kernels.rmsnorm.ops import rmsnorm
 
-__all__ = ["flash_attention", "paged_attention", "rmsnorm"]
+__all__ = [
+    "flash_attention",
+    "paged_attention",
+    "paged_prefill_attention",
+    "rmsnorm",
+]

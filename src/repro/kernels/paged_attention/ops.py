@@ -14,7 +14,10 @@ import functools
 
 import jax
 
-from repro.kernels.paged_attention.ref import paged_attention_reference
+from repro.kernels.paged_attention.ref import (
+    paged_attention_reference,
+    paged_prefill_attention_reference,
+)
 
 
 def _on_tpu() -> bool:
@@ -56,5 +59,51 @@ def paged_attention(
         q, k_pages, v_pages, block_tables,
         q_position=q_position, cache_len=cache_len,
         window=window, softcap=softcap,
+        interpret=(impl == "interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_chunk", "kv_chunk",
+                     "impl"),
+)
+def paged_prefill_attention(
+    q, k_pages, v_pages, block_tables, *,
+    q_positions, cache_len,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    impl: str = "auto",  # auto | pallas | interpret | reference
+):
+    """Multi-token (S>1) chunked-prefill attention against a paged KV pool.
+
+    q: (B,C,Hq,D) — one prefill chunk per row at positions ``q_positions``
+    (B,C) (contiguous: row c sits at ``q_positions[:,0] + c``); cache_len:
+    () or (B,) written tokens including this chunk. ``q_chunk``/``kv_chunk``
+    are the reference path's flash chunk sizes — pass the model's so the
+    reference stays bitwise identical to the dense-gather prefill (the
+    sharing-on/off and paged-vs-dense token-identity guarantees); the
+    kernel streams pages and ignores them. Returns (B,C,Hq,D) in q.dtype.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl == "reference":
+        return paged_prefill_attention_reference(
+            q, k_pages, v_pages, block_tables,
+            q_positions=q_positions, cache_len=cache_len,
+            causal=causal, window=window, softcap=softcap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    from repro.kernels.paged_attention.kernel import (
+        paged_prefill_attention_pallas,
+    )
+
+    return paged_prefill_attention_pallas(
+        q, k_pages, v_pages, block_tables,
+        q_positions=q_positions, cache_len=cache_len,
+        causal=causal, window=window, softcap=softcap,
         interpret=(impl == "interpret"),
     )

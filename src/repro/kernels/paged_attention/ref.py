@@ -34,6 +34,39 @@ def gather_pages(pages, block_tables):
     return pages[tbl].reshape(B, nL * page, Hkv, D)
 
 
+def paged_prefill_attention_reference(
+    q, k_pages, v_pages, block_tables, *, q_positions, cache_len,
+    causal: bool = True, window: int | None = None,
+    softcap: float | None = None, q_chunk: int = 512, kv_chunk: int = 1024,
+):
+    """Multi-token (S>1) chunked-prefill attention against a paged cache.
+
+    q: (B,C,Hq,D) — one prefill chunk per row at positions ``q_positions``
+    (B,C) (row c sits at ``q_positions[b, 0] + c``); cache_len: () or (B,)
+    total written tokens (chunk start + chunk length). Gathers the rows'
+    pages into the dense ``(B, Smax, Hkv, D)`` layout and calls the model's
+    ``flash_attention`` with EXACTLY the arguments the dense-gather prefill
+    branch historically used — the reference IS the dense bridge, bitwise,
+    by shared code rather than by transcription.
+    """
+    # lazy: layers.attention lazily imports this module (gather_pages /
+    # the ops wrappers), so a module-level import here would be a cycle;
+    # function-local keeps the layering acyclic at import time while the
+    # bitwise dense bridge stays shared code instead of a copy that drifts
+    from repro.layers.attention import flash_attention
+
+    k_cache = gather_pages(k_pages, block_tables)
+    v_cache = gather_pages(v_pages, block_tables)
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    k_positions = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+    return flash_attention(
+        q, k_cache, v_cache, q_positions=q_positions,
+        k_positions=k_positions, causal=causal, window=window,
+        softcap=softcap, kv_len=cache_len,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=False,
+    )
+
+
 def paged_attention_reference(
     q, k_pages, v_pages, block_tables, *, q_position, cache_len,
     window: int | None = None, softcap: float | None = None,

@@ -38,6 +38,13 @@ def main(argv=None) -> int:
                     help="KV pool size in pages (default: dense-equivalent "
                          "capacity; size to the expected concurrent-token "
                          "peak for the memory win)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix sharing: map previously "
+                         "prefilled prompt pages into new requests' block "
+                         "tables (copy-on-write at the divergence point)")
+    ap.add_argument("--prefix-trie-capacity", type=int, default=None,
+                    help="max pages the prefix trie may pin (LRU-trimmed); "
+                         "default: unbounded (pool pressure still evicts)")
     ap.add_argument("--sample", action="store_true",
                     help="temperature/top-k sampling instead of greedy argmax")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -78,13 +85,23 @@ def main(argv=None) -> int:
                         overlap=not args.no_overlap, eos_id=args.eos_id,
                         paged=args.paged, page_size=args.page_size,
                         num_pages=args.num_pages,
+                        prefix_cache=args.prefix_cache,
+                        prefix_trie_capacity=args.prefix_trie_capacity,
                         greedy=not args.sample,
                         temperature=args.temperature, top_k=args.top_k,
                         sample_seed=args.sample_seed),
             params, session=session,
         )
+        # with prefix sharing on, give requests something to share: a
+        # common system prompt spanning several pages, divergent tails
+        system = (
+            rng.integers(4, cfg.vocab,
+                         size=min(4 * args.page_size, args.max_len // 2)).tolist()
+            if args.prefix_cache else []
+        )
         for rid in range(args.requests):
-            prompt = rng.integers(4, cfg.vocab, size=rng.integers(3, 10)).tolist()
+            prompt = system + rng.integers(4, cfg.vocab,
+                                           size=rng.integers(3, 10)).tolist()
             sched.submit(prompt, request_id=rid, max_new=args.max_new)
         steps = 0
         while len(sched.completed) < args.requests and steps < 10 * args.max_len:
@@ -100,6 +117,15 @@ def main(argv=None) -> int:
               f"{kv['num_pages']} pages x {kv['page_size']} tokens, "
               f"peak {kv['peak_used_pages']} pages in use "
               f"(utilization {kv['pool_utilization']})")
+        if "prefix_cache" in kv:
+            pc = kv["prefix_cache"]
+            print(f"[serve] prefix cache: hit rate {pc['hit_rate']} "
+                  f"({pc['hits']}/{pc['hits'] + pc['misses']} attaches), "
+                  f"{pc['prefill_tokens_skipped']} prefill tokens skipped, "
+                  f"{pc['pages_saved_by_sharing']} pages saved by sharing, "
+                  f"{pc['cow_copies']} copy-on-write pages, "
+                  f"{pc['trie_pages']} pages cached "
+                  f"({pc['evicted_pages']} evicted)")
     else:
         print(f"[serve] dense KV: {kv['kv_bytes']} bytes")
     session.finalize(args.talp_out or None)

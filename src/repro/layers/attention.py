@@ -417,21 +417,20 @@ def attention_block(
                 impl=cfg.paged_attn_impl,
             )
         else:
-            # chunked prefill: gather the rows' pages into the dense layout
-            # and attend exactly like the dense cache_attend path (the
-            # gather makes this branch elementwise identical to it)
-            from repro.kernels.paged_attention.ref import gather_pages
+            # chunked prefill: attend the block table directly (multi-token
+            # paged read — Pallas streams just the slot's pages on TPU; the
+            # reference path gathers and runs the dense cache_attend flash
+            # verbatim, keeping paged-vs-dense tokens bitwise identical)
+            from repro.kernels.paged_attention.ops import (
+                paged_prefill_attention,
+            )
 
-            kg = gather_pages(new_cache["k_pages"], block_tables)
-            vg = gather_pages(new_cache["v_pages"], block_tables)
-            Smax = kg.shape[1]
-            k_positions = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
-            o = flash_attention(
-                q, kg, vg, q_positions=positions, k_positions=k_positions,
+            o = paged_prefill_attention(
+                q, new_cache["k_pages"], new_cache["v_pages"], block_tables,
+                q_positions=positions, cache_len=cache_len,
                 causal=causal, window=window, softcap=cfg.attn_softcap,
-                kv_len=cache_len,
                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
-                causal_skip=False,
+                impl=cfg.paged_attn_impl,
             )
     elif cache is not None:
         # write current k/v at each row's own positions, then attend against

@@ -428,7 +428,10 @@ def prefill_chunk(
     Returns (logits (B,V) at each row's LAST VALID position, new_caches) —
     on the final chunk of a prompt those logits sample the first generated
     token. ``block_tables`` (B, n_logical) routes attention-cache writes
-    and reads through the paged pool layout (see ``init_cache``)."""
+    and reads through the paged pool layout (see ``init_cache``) — reads
+    go through ``kernels.paged_attention.paged_prefill_attention``, the
+    multi-token paged read that attends the block table directly instead
+    of gathering a slot's pages into a dense view per chunk."""
     x = _embed_inputs(params, batch, cfg, lc)
     B, C, _ = x.shape
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))

@@ -64,6 +64,23 @@ class ServeConfig:
     paged: bool = True
     page_size: int = 16
     num_pages: int | None = None
+    # cross-request prefix cache (opt-in, paged only): a radix trie keyed
+    # on prompt-token pages maps previously prefilled prompt prefixes into
+    # a new request's block table read-only (refcount bump; that part of
+    # chunked prefill is skipped), and the first partially-shared page is
+    # copy-on-write. ``prefix_trie_capacity`` caps how many pages the trie
+    # may pin, LRU-trimmed on insert; None = unbounded (pool pressure
+    # still evicts LRU entries nobody else reads).
+    prefix_cache: bool = False
+    prefix_trie_capacity: int | None = None
+
+    def __post_init__(self):
+        if self.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache=True requires paged=True: prefix sharing maps "
+                "pool pages into multiple slots' block tables, which the "
+                "dense (batch, max_len) layout cannot express"
+            )
 
 
 def _cache_path_name(path) -> str:
@@ -298,6 +315,28 @@ def make_prefill_chunk_step(cfg, mesh, *, paged=False, greedy=True,
     return chunk_step_dense
 
 
+def make_cow_copy_step():
+    """Copy one physical page's K/V rows (every layer, both pools) to a
+    fresh page, on device — the copy-on-write half of prefix sharing: the
+    shared rows of a partially-matched page are duplicated so the new
+    request's divergent tokens never touch the donor page. Non-paged
+    leaves (recurrent state) pass through untouched."""
+
+    def cow_copy(caches, src, dst):
+        """caches: full stacked tree; src/dst: () int32 physical pages."""
+        flat = jax.tree_util.tree_flatten_with_path(caches)
+        leaves = [
+            leaf.at[:, dst].set(leaf[:, src]) if _is_paged_leaf(path)
+            else leaf
+            for path, leaf in flat[0]
+        ]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(caches), leaves
+        )
+
+    return cow_copy
+
+
 def make_encoder_step(cfg, mesh):
     """Encoder-only archs have no decode; "prefill" = full forward."""
     lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
@@ -320,33 +359,58 @@ def make_encoder_step(cfg, mesh):
 # every concurrent A/B pattern in the repo (paged/dense x sampling x arch);
 # an evicted entry merely recompiles on the next scheduler construction.
 @functools.lru_cache(maxsize=8)
-def _serve_step_fns(cfg, mesh, paged, greedy, temperature, top_k):
-    """Shared jitted (decode, prefill-chunk) pair per (cfg, mesh, serve
-    statics): scheduler instances (restarts, A/B benchmark runs) reuse
-    traces instead of paying a fresh compile each."""
+def _serve_step_fns(cfg, mesh, paged, greedy, temperature, top_k,
+                    prefix_cache=False, prefix_trie_capacity=None):
+    """Shared jitted (decode, prefill-chunk, cow-copy) triple per (cfg,
+    mesh, serve statics): scheduler instances (restarts, A/B benchmark
+    runs) reuse traces instead of paying a fresh compile each. The
+    prefix-cache knobs are part of the key: the copy-on-write page-copy
+    step (and its donated-cache trace) only exists for prefix-cached
+    schedulers, and keying every serving knob keeps one entry per
+    distinct configuration."""
     kw = dict(paged=paged, greedy=greedy, temperature=temperature, top_k=top_k)
+    cow = (
+        jax.jit(make_cow_copy_step(), donate_argnums=(0,))
+        if paged and prefix_cache else None
+    )
     return (
         jax.jit(make_serve_decode_step(cfg, mesh, **kw), donate_argnums=(4,)),
         jax.jit(make_prefill_chunk_step(cfg, mesh, **kw), donate_argnums=(5,)),
+        cow,
     )
 
 
 class PageAllocator:
-    """Free-list allocator over the shared KV page pool.
+    """Refcounted free-list allocator over the shared KV page pool.
 
     Pages are plain integers into the pool's page axis; the scheduler owns
     the per-slot block tables. ``alloc`` raises a clean error on exhaustion
     *before* any index is handed out — a full pool can never silently remap
-    a neighbor's pages."""
+    a neighbor's pages. With cross-request prefix sharing a physical page
+    may back multiple block-table rows (plus the prefix trie's own pin):
+    ``alloc`` hands pages out at refcount 1, ``share`` bumps the count, and
+    ``release`` decrements it, returning a page to the free list only when
+    its count drops to zero — retiring a request can never free a page a
+    neighbor (or the trie) still reads."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))  # pop() -> page 0 first
+        self.refs: dict[int, int] = {}  # allocated page -> reference count
         self.peak_used = 0
 
     @property
     def used(self) -> int:
         return self.num_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one reference."""
+        return sum(1 for c in self.refs.values() if c > 1)
 
     def alloc(self, n: int, *, owner=None) -> list[int]:
         if n > len(self._free):
@@ -357,11 +421,173 @@ class PageAllocator:
                 f"requests sooner"
             )
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
         self.peak_used = max(self.peak_used, self.used)
         return pages
 
+    def share(self, pages: list[int]) -> None:
+        """Add one reference to each (already allocated) page."""
+        for p in pages:
+            self.refs[p] += 1
+
     def release(self, pages: list[int]) -> None:
-        self._free.extend(pages)
+        for p in pages:
+            c = self.refs[p] = self.refs[p] - 1
+            if c == 0:
+                del self.refs[p]
+                self._free.append(p)
+
+
+class _TrieNode:
+    __slots__ = ("tokens", "page", "children", "parent", "last_used")
+
+    def __init__(self, tokens, page, parent):
+        self.tokens = tokens      # the page_size-token tuple keying this node
+        self.page = page          # physical pool page holding their K/V
+        self.children: dict[tuple, _TrieNode] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Radix trie over prompt-token pages for cross-request KV sharing.
+
+    Nodes are keyed by the exact ``page_size``-token tuple they cover —
+    Python's tuple hashing IS the page hash, with exact compare, so a hash
+    collision can never alias two different prefixes — and a root-to-node
+    path spells out a prompt prefix in whole pages, mapped to resident
+    pool pages. The trie holds its OWN reference on every inserted page
+    (``PageAllocator.share``), so cached pages survive their inserting
+    request's retirement; they are reclaimed by LRU eviction under pool
+    pressure (``evict_for`` — only leaves whose page has no reader besides
+    the trie, since evicting a still-shared page frees nothing) or by LRU
+    trim when ``capacity`` (max pinned pages) would be exceeded on insert.
+    """
+
+    def __init__(self, page_size: int, allocator: PageAllocator,
+                 capacity: int | None = None):
+        self.page_size = page_size
+        self.allocator = allocator
+        self.capacity = capacity
+        self.root = _TrieNode((), -1, None)
+        self.size = 0       # nodes == pages currently pinned
+        self._clock = 0     # monotonic LRU clock
+        self.stats = {
+            "hits": 0, "misses": 0, "hit_tokens": 0,
+            "prefill_tokens_skipped": 0, "pages_shared": 0, "cow_copies": 0,
+            "inserted_pages": 0, "evicted_pages": 0,
+        }
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+
+    def match(self, prompt):
+        """Longest cached prefix of ``prompt``: the chain of fully-matched
+        page nodes, plus the best partially-matching child of the last one
+        (the copy-on-write donor) with its matching row count."""
+        psize = self.page_size
+        node, chain, i = self.root, [], 0
+        while len(prompt) - i >= psize:
+            child = node.children.get(tuple(int(t) for t in prompt[i:i + psize]))
+            if child is None:
+                break
+            chain.append(child)
+            node, i = child, i + psize
+        tail = tuple(int(t) for t in prompt[i:i + psize])
+        donor, donor_rows = None, 0
+        for key, child in node.children.items():
+            n = 0
+            for a, b in zip(key, tail):
+                if a != b:
+                    break
+                n += 1
+            if n > donor_rows:
+                donor, donor_rows = child, n
+        return chain, donor, donor_rows
+
+    def insert(self, prompt, pages) -> None:
+        """Record a prefilled prompt's full pages (called when a request's
+        prefill completes). Existing nodes are LRU-touched; new nodes pin
+        their page with a trie-owned reference. Pages straddling the
+        prompt/generated boundary are never inserted — decode will write
+        over their tails."""
+        psize = self.page_size
+        node = self.root
+        for j in range(len(prompt) // psize):
+            key = tuple(int(t) for t in prompt[j * psize:(j + 1) * psize])
+            child = node.children.get(key)
+            if child is None:
+                if self.capacity is not None and self.size >= self.capacity:
+                    # at capacity: trim the LRU leaf off some OTHER path;
+                    # if the whole trie is this insertion, stop growing
+                    if not self._evict_lru(exclude=self._path_ids(node)):
+                        return
+                child = _TrieNode(key, pages[j], node)
+                node.children[key] = child
+                self.allocator.share([pages[j]])
+                self.size += 1
+                self.stats["inserted_pages"] += 1
+            self._touch(child)
+            node = child
+
+    # -- eviction --------------------------------------------------------
+
+    def _path_ids(self, node: _TrieNode) -> set:
+        out = set()
+        while node is not None:
+            out.add(id(node))
+            node = node.parent
+        return out
+
+    def _leaves(self) -> list[_TrieNode]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def _evict(self, node: _TrieNode) -> None:
+        del node.parent.children[node.tokens]
+        self.allocator.release([node.page])
+        self.size -= 1
+        self.stats["evicted_pages"] += 1
+
+    def _evict_lru(self, *, exclude=frozenset(),
+                   only_unreferenced: bool = False) -> bool:
+        """Evict the least-recently-used leaf; True if one was evicted."""
+        cand = [
+            n for n in self._leaves()
+            if id(n) not in exclude
+            and (not only_unreferenced
+                 or self.allocator.refs.get(n.page, 0) == 1)
+        ]
+        if not cand:
+            return False
+        self._evict(min(cand, key=lambda n: n.last_used))
+        return True
+
+    def evict_for(self, n_pages: int) -> int:
+        """Pool pressure: free >= ``n_pages`` by evicting LRU leaves whose
+        page has no reader besides the trie. Inner nodes become evictable
+        as their children go. Returns the number of pages actually freed
+        (may fall short — the caller's alloc then raises cleanly)."""
+        freed = 0
+        while freed < n_pages:
+            before = self.allocator.free_pages
+            if not self._evict_lru(only_unreferenced=True):
+                break
+            freed += self.allocator.free_pages - before
+        return freed
+
+    def clear(self) -> None:
+        """Drop every cached page (teardown / tests)."""
+        while self._evict_lru():
+            pass
 
 
 class BatchScheduler:
@@ -393,6 +619,19 @@ class BatchScheduler:
     the pool raises a clean error before any page is handed out —
     neighbors' pages are never remapped. ``paged=False`` keeps the dense
     layout; generated tokens are bitwise identical either way.
+
+    With ``scfg.prefix_cache`` (opt-in, paged only) a **cross-request
+    prefix cache** rides on the pool: completed prefills insert their
+    prompts' full pages into a radix trie keyed on page-token tuples, and
+    attach walks the trie, maps every fully-matched resident page into the
+    new request's block table read-only (refcount bump), skips that part
+    of chunked prefill, and copy-on-writes the first partially-shared page
+    (fresh page, donor rows copied on device, divergent tokens prefilled
+    over the tail). Retire releases references, never pages a neighbor or
+    the trie still holds; under pool pressure the trie evicts its LRU
+    entries that no live request reads. Generated tokens stay identical
+    with sharing on or off — a shared page holds exactly the K/V the
+    request would have prefilled itself.
 
     Sampling: greedy argmax by default (bitwise-stable). With
     ``greedy=False``, temperature/top-k sampling runs inside the decode and
@@ -442,8 +681,9 @@ class BatchScheduler:
         self.session = session if session is not None else PerfSession(
             SessionConfig(app_name="serve", backend="null")
         )
-        decode_fn, prefill_fn = _serve_step_fns(
-            cfg, mesh, scfg.paged, scfg.greedy, scfg.temperature, scfg.top_k
+        decode_fn, prefill_fn, self._cow_copy = _serve_step_fns(
+            cfg, mesh, scfg.paged, scfg.greedy, scfg.temperature, scfg.top_k,
+            scfg.prefix_cache, scfg.prefix_trie_capacity,
         )
         self.decode = self.session.wrap_step(
             decode_fn,
@@ -479,8 +719,14 @@ class BatchScheduler:
                 cfg, scfg.batch, scfg.max_len, paged=True,
                 page_size=scfg.page_size, num_pages=n_pages,
             )
+            self._prefix: PrefixCache | None = (
+                PrefixCache(scfg.page_size, self._alloc,
+                            capacity=scfg.prefix_trie_capacity)
+                if scfg.prefix_cache else None
+            )
         else:
             self._alloc = None
+            self._prefix = None
             self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
         # per-slot sampling base keys, carried on device and STATIC for the
         # scheduler's lifetime: each sampling step folds the slot's key with
@@ -582,6 +828,8 @@ class BatchScheduler:
                     self._seeds.pop(slot, None)
                     task = {"req": req, "slot": slot, "done": 0,
                             "prompt": np.asarray(req["prompt"], np.int32)}
+                    if self._prefix is not None:
+                        task["done"] = self._attach_prefix(slot, req)
                     self._prefilling[slot] = task
                     self._prefills.append(task)
         if reused:
@@ -611,6 +859,20 @@ class BatchScheduler:
 
     # -- paged-pool bookkeeping ------------------------------------------
 
+    def _alloc_pages(self, n: int, owner) -> list[int]:
+        """Allocate through the prefix cache's eviction hook: under pool
+        pressure, LRU trie entries no live request reads are evicted
+        first; if the pool is still short the exhaustion error carries the
+        full kv/sharing accounting, so OOM reports are self-explanatory."""
+        if self._prefix is not None and n > self._alloc.free_pages:
+            self._prefix.evict_for(n - self._alloc.free_pages)
+        try:
+            return self._alloc.alloc(n, owner=owner)
+        except RuntimeError as e:
+            raise RuntimeError(
+                f"{e} [kv_cache_stats: {self.kv_cache_stats()}]"
+            ) from None
+
     def _ensure_pages(self, slot: int, last_pos: int, owner) -> None:
         """Grow ``slot``'s block table so position ``last_pos`` (inclusive)
         is backed by a physical page; no-op when already covered (and in
@@ -621,10 +883,80 @@ class BatchScheduler:
         have = len(self._slot_pages[slot])
         if need <= have:
             return
-        new = self._alloc.alloc(need - have, owner=owner)
+        new = self._alloc_pages(need - have, owner)
         self._tables[slot, have:need] = new
         self._slot_pages[slot].extend(new)
         self._tables_dirty = True
+
+    def _attach_prefix(self, slot: int, req) -> int:
+        """Map the trie's longest cached prefix of ``req``'s prompt into
+        ``slot``'s block table at attach. Fully-matched pages are mapped
+        read-only (refcount bump — their prefill is skipped entirely); a
+        partially-matched page is copy-on-write: a fresh page is
+        allocated, the donor's rows are copied on device, and the
+        divergent tokens are prefilled over its tail. At least one prompt
+        token is always left to prefill — the final chunk's logits sample
+        the request's first generated token. Returns the prefill
+        fast-forward (prompt tokens already backed by mapped pages).
+
+        Hybrid/recurrent archs still share matched pages (the memory win)
+        but skip no compute: recurrent state has no positional masking,
+        so the full prompt must run through the stack regardless.
+        Re-prefilling a shared page writes bitwise-identical K/V (same
+        tokens, same positions, same chunk grid as the original), so
+        concurrent readers of the shared page are unharmed."""
+        prompt = req["prompt"]
+        psize = self.scfg.page_size
+        chain, donor, donor_rows = self._prefix.match(prompt)
+        st = self._prefix.stats
+        if self._has_recurrent:
+            for j, node in enumerate(chain):
+                self._alloc.share([node.page])
+                self._tables[slot, j] = node.page
+                self._slot_pages[slot].append(node.page)
+                self._prefix._touch(node)
+            if chain:
+                self._tables_dirty = True
+                st["hits"] += 1
+                st["hit_tokens"] += len(chain) * psize
+                st["pages_shared"] += len(chain)
+            else:
+                st["misses"] += 1
+            return 0
+        use = len(chain) * psize + donor_rows
+        use = min(use, len(prompt) - 1)
+        if use <= 0:
+            st["misses"] += 1
+            return 0
+        n_full, cow_rows = divmod(use, psize)
+        # the leave-one-token clamp can demote the last fully-matched page
+        # to the copy-on-write donor (prompt ends exactly on its boundary)
+        cow_donor = None
+        if cow_rows:
+            cow_donor = chain[n_full] if n_full < len(chain) else donor
+        for node in chain[:n_full]:
+            self._alloc.share([node.page])
+            self._tables[slot, len(self._slot_pages[slot])] = node.page
+            self._slot_pages[slot].append(node.page)
+            self._prefix._touch(node)
+        if cow_donor is not None:
+            new = self._alloc_pages(1, req["id"])[0]
+            self._tables[slot, len(self._slot_pages[slot])] = new
+            self._slot_pages[slot].append(new)
+            self._prefix._touch(cow_donor)
+            with compat.use_mesh(self.mesh):
+                self.caches = self._cow_copy(
+                    self.caches,
+                    jnp.asarray(cow_donor.page, jnp.int32),
+                    jnp.asarray(new, jnp.int32),
+                )
+            st["cow_copies"] += 1
+        self._tables_dirty = True
+        st["hits"] += 1
+        st["hit_tokens"] += use
+        st["prefill_tokens_skipped"] += use
+        st["pages_shared"] += n_full
+        return use
 
     def _release_slot_pages(self, slot: int) -> None:
         if self._alloc is None or not self._slot_pages[slot]:
@@ -671,7 +1003,24 @@ class BatchScheduler:
                 pool_utilization=round(
                     self._alloc.peak_used / max(self._alloc.num_pages, 1), 4
                 ),
+                refcounted_pages=len(self._alloc.refs),
+                shared_pages=self._alloc.shared_pages,
             )
+            if self._prefix is not None:
+                st = self._prefix.stats
+                lookups = st["hits"] + st["misses"]
+                out["prefix_cache"] = {
+                    "trie_pages": self._prefix.size,
+                    "hits": st["hits"],
+                    "misses": st["misses"],
+                    "hit_rate": round(st["hits"] / lookups, 4) if lookups else 0.0,
+                    "hit_tokens": st["hit_tokens"],
+                    "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+                    "pages_saved_by_sharing": st["pages_shared"],
+                    "cow_copies": st["cow_copies"],
+                    "inserted_pages": st["inserted_pages"],
+                    "evicted_pages": st["evicted_pages"],
+                }
         return out
 
     def _dispatch_prefill_chunk(self) -> None:
@@ -701,6 +1050,11 @@ class BatchScheduler:
             # token — it joins the deferred readback like any decode output,
             # and seeds the slot's decode input (device-side, next tick)
             slot, req = task["slot"], task["req"]
+            if self._prefix is not None:
+                # cache the prompt's full pages for future requests: shared
+                # pages re-touch their nodes, fresh/CoW pages insert new
+                # ones (each pinned with a trie-owned reference)
+                self._prefix.insert(req["prompt"], self._slot_pages[slot])
             self._prefills.pop(0)
             self._prefilling[slot] = None
             self.active[slot] = req

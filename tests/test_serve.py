@@ -699,6 +699,205 @@ def test_sampling_greedy_flag_matches_historical_argmax():
     assert req["generated"] == _reference_generate(cfg, mesh, params, prompt, 6)
 
 
+# ---------------------------------------------------------------------------
+# cross-request prefix cache: radix trie + copy-on-write pages
+# ---------------------------------------------------------------------------
+# The guarantee under test everywhere below: prefix sharing is a pure
+# memory/compute optimization — generated tokens are bitwise identical with
+# the cache on or off, because a shared page holds exactly the K/V the
+# request would have prefilled itself.
+
+
+def _run_shared_prefix(cfg, mesh, params, prompts, *, prefix_cache,
+                       page_size=8, num_pages=None, prefill_chunk=4,
+                       max_new=6, batch=2, trie_capacity=None):
+    """Warm-first schedule: request 0 completes (inserting its prompt pages
+    into the trie when sharing is on), then the rest attach against it."""
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=batch, prefill_chunk=prefill_chunk,
+                        paged=True, page_size=page_size, num_pages=num_pages,
+                        prefix_cache=prefix_cache,
+                        prefix_trie_capacity=trie_capacity),
+            params,
+        )
+        sched.submit(prompts[0], request_id=0, max_new=max_new)
+        _run(sched, 1)
+        for rid, p in enumerate(prompts[1:], start=1):
+            sched.submit(p, request_id=rid, max_new=max_new)
+        _run(sched, len(prompts))
+    return sched
+
+
+def _tokens(sched):
+    return {r["id"]: r["generated"] for r in sched.completed}
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma2-2b", "zamba2-2.7b"])
+def test_prefix_sharing_identical_tokens(arch):
+    """Sharing on/off bitwise token identity on a shared-system-prompt
+    workload — across a plain KV stack, a sliding window SMALLER than the
+    shared prefix (gemma2: the window crosses shared-page boundaries), and
+    a hybrid mamba+attention stack (zamba2: attention pages are shared for
+    the memory win but no prefill compute is skipped, because the recurrent
+    state must still advance over every prompt token)."""
+    if arch == "tinyllama-1.1b":
+        cfg, mesh, params = _serve_fixtures()
+    else:
+        cfg = smoke_config(arch).replace(
+            compute_dtype_name="float32", param_dtype_name="float32",
+            **({"window": 5} if arch == "gemma2-2b" else {}),
+        )
+        mesh = make_host_mesh()
+        params = init_params(
+            T.model_params(cfg), jax.random.PRNGKey(0), cfg.param_dtype
+        )
+    rng = np.random.default_rng(13)
+    system = rng.integers(4, cfg.vocab, size=24).tolist()  # 3 pages of 8
+    prompts = [system + rng.integers(4, cfg.vocab, size=int(n)).tolist()
+               for n in rng.integers(3, 8, size=5)]
+
+    on = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=True)
+    off = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=False)
+    assert _tokens(on) == _tokens(off)
+    pc = on.kv_cache_stats()["prefix_cache"]
+    assert pc["hits"] == len(prompts) - 1  # everyone after the warmup hits
+    assert pc["pages_saved_by_sharing"] > 0
+    if arch == "zamba2-2.7b":
+        # hybrid: pages shared (memory), no compute skipped (the recurrent
+        # state has no positional mask to fast-forward through)
+        assert pc["prefill_tokens_skipped"] == 0
+    else:
+        assert pc["prefill_tokens_skipped"] > 0
+        assert on.stats["prefill_chunks"] < off.stats["prefill_chunks"]
+    # strictly fewer live pages at peak, trie pins included
+    assert (on.kv_cache_stats()["peak_used_pages"]
+            < off.kv_cache_stats()["peak_used_pages"])
+
+
+def test_prefix_cow_mid_page_divergence():
+    """Prompts diverging MID-page: the fully-matched pages are shared
+    read-only, the partially-matched page is copy-on-write (fresh page,
+    device copy of the donor's rows, divergent tokens prefilled over the
+    tail) — and the tokens still match the no-sharing run exactly."""
+    cfg, mesh, params = _serve_fixtures()
+    rng = np.random.default_rng(17)
+    common = rng.integers(4, cfg.vocab, size=20).tolist()  # 2.5 pages of 8
+    prompts = [common + rng.integers(4, cfg.vocab, size=4).tolist()
+               for _ in range(3)]  # diverge at token 20, mid-page 2
+
+    on = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=True)
+    off = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=False)
+    assert _tokens(on) == _tokens(off)
+    pc = on.kv_cache_stats()["prefix_cache"]
+    assert pc["cow_copies"] >= 1
+    assert pc["hit_tokens"] >= 20  # 2 full pages + 4 donor rows per hit
+
+
+def test_prefix_refcounts_no_leak_under_churn():
+    """Slot-reuse churn with sharing on: after every request retires, the
+    only pages still allocated are the trie's own pins (one reference
+    each); clear() then returns the pool to empty and the block tables of
+    all slots are fully cleared — no leaked references either way."""
+    cfg, mesh, params = _serve_fixtures()
+    rng = np.random.default_rng(19)
+    system = rng.integers(4, cfg.vocab, size=16).tolist()
+    prompts = [system + rng.integers(4, cfg.vocab, size=int(n)).tolist()
+               for n in rng.integers(3, 8, size=8)]  # 8 requests, 2 slots
+
+    sched = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=True)
+    assert len(sched.completed) == len(prompts)
+    alloc, trie = sched._alloc, sched._prefix
+    assert alloc.used == trie.size, "pages leaked past request retirement"
+    assert all(c == 1 for c in alloc.refs.values()), (
+        "dangling non-trie references after all requests retired"
+    )
+    assert (sched._tables == -1).all()
+    trie.clear()
+    assert alloc.used == 0 and trie.size == 0
+    assert not alloc.refs
+
+
+def test_prefix_trie_eviction_under_pool_pressure():
+    """A pool too small to hold every retired prompt's pages forces LRU
+    trie eviction on attach; the evicted entries' neighbors (still-cached
+    prefixes AND in-flight requests) are unharmed — every request still
+    matches the no-sharing tokens, and eviction provably happened."""
+    cfg, mesh, params = _serve_fixtures()
+    rng = np.random.default_rng(23)
+    # 4 DISTINCT 16-token prompts (2 pages each) + decode growth vs an
+    # 8-page pool: the trie cannot keep them all pinned
+    prompts = [rng.integers(4, cfg.vocab, size=16).tolist() for _ in range(4)]
+
+    on = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=True,
+                            num_pages=8, batch=2)
+    off = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=False,
+                             num_pages=8, batch=2)
+    assert _tokens(on) == _tokens(off)
+    pc = on.kv_cache_stats()["prefix_cache"]
+    assert pc["evicted_pages"] >= 1
+    assert on._alloc.used == on._prefix.size  # pins accounted, nothing leaked
+
+
+def test_prefix_trie_capacity_lru_trim():
+    """prefix_trie_capacity bounds the trie's pinned pages: inserts past
+    the cap LRU-trim other paths, size never exceeds the cap, and sharing
+    still works for the prefixes that stay resident."""
+    cfg, mesh, params = _serve_fixtures()
+    rng = np.random.default_rng(29)
+    system = rng.integers(4, cfg.vocab, size=16).tolist()
+    prompts = [system + rng.integers(4, cfg.vocab, size=int(n)).tolist()
+               for n in rng.integers(3, 8, size=5)]
+
+    sched = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=True,
+                               trie_capacity=2)
+    off = _run_shared_prefix(cfg, mesh, params, prompts, prefix_cache=False)
+    assert _tokens(sched) == _tokens(off)
+    assert sched._prefix.size <= 2
+    assert sched.kv_cache_stats()["prefix_cache"]["hits"] > 0
+
+
+def test_prefix_cache_requires_paged_layout():
+    """ServeConfig must reject prefix_cache on the dense layout at
+    construction — a shared page cannot be expressed in (batch, max_len)
+    buffers, and failing at attach time would be far harder to debug."""
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(max_len=64, batch=2, paged=False, prefix_cache=True)
+
+
+def test_prefix_sharing_sampled_streams_identical():
+    """Sampling composes with sharing: per-slot streams are keyed on
+    fold_in(slot_key, position) — a function of WHERE the request decodes,
+    not of how the KV for earlier positions got there — so sampled tokens
+    are bitwise identical with sharing on or off."""
+    cfg, mesh, params = _serve_fixtures()
+    rng = np.random.default_rng(31)
+    system = rng.integers(4, cfg.vocab, size=16).tolist()
+    prompts = [system + rng.integers(4, cfg.vocab, size=int(n)).tolist()
+               for n in rng.integers(3, 8, size=4)]
+
+    def run(prefix_cache):
+        with mesh:
+            sched = BatchScheduler(
+                cfg, mesh,
+                ServeConfig(max_len=64, batch=2, prefill_chunk=4,
+                            paged=True, page_size=8,
+                            prefix_cache=prefix_cache,
+                            greedy=False, temperature=0.8, top_k=20,
+                            sample_seed=3),
+                params,
+            )
+            sched.submit(prompts[0], request_id=0, max_new=6)
+            _run(sched, 1)
+            for rid, p in enumerate(prompts[1:], start=1):
+                sched.submit(p, request_id=rid, max_new=6)
+            _run(sched, len(prompts))
+        return _tokens(sched)
+
+    assert run(True) == run(False)
+
+
 def test_batch_scheduler_batches_token_readback(monkeypatch):
     """Decode steps must NOT pay one host round-trip each: readbacks are
     deferred and flushed in a single device_get at completion boundaries."""
