@@ -19,7 +19,12 @@ chunked prefill must keep producing identical tokens with no decode gap
 while prefilling, the paged pool footprint must stay strictly below the
 dense buffers, and cross-request prefix sharing must keep tokens bitwise
 identical on/off in both decode modes while strictly lowering peak live
-pages and skipping prefill chunks).
+pages and skipping prefill chunks). It also forces a preemption (tiny
+page pool vs ample pool) and asserts the recompute-resumed token streams
+are bitwise identical — greedy AND sampled — with ``preemptions > 0`` and
+zero allocator pages leaked after drain, plus a goodput sanity pass of
+the open-loop traffic harness under Poisson and bursty arrivals (every
+request completed or cancelled, none failed, TTFT percentiles ordered).
 """
 
 from __future__ import annotations

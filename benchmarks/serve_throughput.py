@@ -34,10 +34,21 @@ the mixed-length trace, and that prefix sharing keeps tokens bitwise
 identical (greedy AND sampled) while strictly lowering peak live pages
 and skipping prefill chunks.
 
+A fifth section (``"traffic"``) replays the open-loop harness from
+``repro.serve.traffic`` — the same seeded workload under Poisson and
+Markov-modulated bursty arrivals against a deliberately tight page pool —
+and reports goodput, p50/p95/p99 TTFT, queue depth and the scheduler's
+preemption/resume/cancellation counters; ``--check`` additionally forces
+a preemption (tiny pool vs ample pool) and asserts the recompute-resume
+token streams are bitwise identical, greedy AND sampled, with zero pages
+leaked after drain.
+
     PYTHONPATH=src:. python benchmarks/serve_throughput.py [arch ...]
+    PYTHONPATH=src:. python benchmarks/serve_throughput.py --traffic [arch ...]
 
 With archs given (the nightly sweep), the first writes BENCH_serve.json
-and each additional arch writes BENCH_serve_<arch>.json.
+and each additional arch writes BENCH_serve_<arch>.json; ``--traffic``
+writes ``BENCH_serve_traffic_<arch>.json`` per arch.
 """
 
 from __future__ import annotations
@@ -236,6 +247,100 @@ def run_prefix(cfg, mesh, params, *, n_requests: int, prefix_len: int,
     }
 
 
+def run_traffic(cfg, mesh, params, *, arrival: str, n_requests: int = 10,
+                rate: float = 0.8, batch: int = 2, max_len: int = 64,
+                page_size: int = 8, num_pages: int = 6,
+                prefill_chunk: int = 4, cancel_frac: float = 0.2,
+                preempt_policy: str = "priority", seed: int = 0,
+                keep_generated: bool = False) -> dict:
+    """One open-loop traffic pass: a seeded workload (Poisson or bursty
+    arrivals, mixed lengths, priority classes, scheduled cancellations)
+    against a deliberately tight page pool, measured by ``traffic.replay``
+    — goodput, TTFT percentiles, queue depth and preemption counts."""
+    from repro import compat
+    from repro.serve.serve import BatchScheduler, ServeConfig
+    from repro.serve.traffic import TrafficConfig, generate_workload, replay
+
+    tcfg = TrafficConfig(
+        n_requests=n_requests, seed=seed, arrival=arrival, rate=rate,
+        prompt_short=(4, 10), prompt_long=(12, 20), max_new_short=(3, 6),
+        max_new_long=(8, 12), cancel_frac=cancel_frac, vocab_hi=cfg.vocab,
+    )
+    workload = generate_workload(tcfg)
+    with compat.use_mesh(mesh):
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=max_len, batch=batch,
+                        prefill_chunk=prefill_chunk, paged=True,
+                        page_size=page_size, num_pages=num_pages,
+                        preempt_policy=preempt_policy),
+            params,
+        )
+        metrics = replay(sched, workload)
+    if not keep_generated:
+        metrics.pop("generated", None)
+    metrics["arrival"] = arrival
+    metrics["config"] = {
+        "n_requests": n_requests, "rate": rate, "batch": batch,
+        "page_size": page_size, "num_pages": num_pages,
+        "cancel_frac": cancel_frac, "preempt_policy": preempt_policy,
+        "seed": seed,
+    }
+    return metrics
+
+
+def _forced_preempt(cfg, mesh, params, *, num_pages: int,
+                    greedy: bool) -> "object":
+    """Two 2-page requests through a pool of ``num_pages``: at 3 the
+    younger parks itself mid-decode and resumes after the older retires;
+    at 16 nothing ever waits. Returns the drained scheduler."""
+    from repro import compat
+    from repro.serve.serve import BatchScheduler, ServeConfig
+
+    kw = {} if greedy else dict(greedy=False, temperature=0.8, top_k=20,
+                                sample_seed=3)
+    with compat.use_mesh(mesh):
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=2, prefill_chunk=4, paged=True,
+                        page_size=8, num_pages=num_pages, **kw),
+            params,
+        )
+        for rid, p in enumerate([list(range(4, 12)), list(range(20, 28))]):
+            sched.submit(p, request_id=rid, max_new=8)
+        sched.drain()
+    return sched
+
+
+def _check_preemption(cfg, mesh, params) -> None:
+    """The forced-preemption identity gate: preemption + recompute-resume
+    must be a pure scheduling decision — tokens bitwise identical to the
+    ample-pool run, greedy AND sampled, with real pressure (preemptions
+    > 0) and nothing leaked after drain."""
+    for greedy in (True, False):
+        mode = "greedy" if greedy else "sampled"
+        ample = _forced_preempt(cfg, mesh, params, num_pages=16,
+                                greedy=greedy)
+        tight = _forced_preempt(cfg, mesh, params, num_pages=3,
+                                greedy=greedy)
+        if tight.stats["preemptions"] <= 0:
+            raise AssertionError(
+                f"forced-preemption run ({mode}) saw no preemption: "
+                f"{tight.kv_cache_stats()['pressure']}"
+            )
+        toks = lambda s: {r["id"]: r["generated"] for r in s.completed}
+        if toks(tight) != toks(ample):
+            raise AssertionError(
+                f"preempt-resume changed tokens vs ample pool ({mode}): "
+                f"{toks(tight)} vs {toks(ample)}"
+            )
+        if tight._alloc.used != 0:
+            raise AssertionError(
+                f"allocator leaked {tight._alloc.used} pages across "
+                f"preempt/resume ({mode})"
+            )
+
+
 def _workload_pages(prompts, max_new: int, batch: int, page_size: int) -> int:
     """Pool size for the trace: every concurrently-resident request (at most
     ``batch``) fully extended — the honest paged footprint, well below the
@@ -274,6 +379,14 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
                         page_size=page_size)
     gen_po, gen_ps = paged_ov.pop("generated"), paged_sw.pop("generated")
     gen_do = dense_ov.pop("generated")
+    # open-loop traffic: the same seeded workload under memoryless and
+    # bursty arrivals, against a pool tight enough that bursts queue and
+    # preempt — goodput and TTFT tails are the load-dependent numbers a
+    # fixed FIFO trace can never produce
+    traffic = {
+        arrival: run_traffic(cfg, mesh, params, arrival=arrival)
+        for arrival in ("poisson", "burst")
+    }
     ostats = paged_ov["stats"]
     kv_paged, kv_dense = paged_ov["kv"], dense_ov["kv"]
     return {
@@ -305,6 +418,7 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
         "paged_stop_world": paged_sw,
         "dense_overlap": dense_ov,
         "prefix": prefix,
+        "traffic": traffic,
     }
 
 
@@ -378,13 +492,33 @@ def check(out_path: str | None = None) -> str:
         raise AssertionError(
             "paged KV cache changed sampled tokens vs the dense layout"
         )
+    # forced-preemption identity (greedy AND sampled) + no-leak gate
+    _check_preemption(cfg, mesh, params)
+    # goodput sanity under both arrival processes: the tight pool must
+    # degrade gracefully (preempt/queue), never drop or fail a request
+    for arrival, m in result["traffic"].items():
+        if m["completed"] + m["cancelled"] != m["requests"] or m["failed"]:
+            raise AssertionError(
+                f"traffic[{arrival}] lost requests: {m['completed']} done + "
+                f"{m['cancelled']} cancelled + {m['failed']} failed "
+                f"of {m['requests']}"
+            )
+        if m["good_tokens"] <= 0 or m["goodput_tokens_per_sec"] <= 0:
+            raise AssertionError(
+                f"traffic[{arrival}] produced no goodput: {m}"
+            )
+        if not (m["ttft_p50_s"] <= m["ttft_p95_s"] <= m["ttft_p99_s"]):
+            raise AssertionError(
+                f"traffic[{arrival}] TTFT percentiles inverted: {m}"
+            )
     _save(result, out_path)
     return csv_line(
         "check_serve_paged",
         ov["wall_s"] * 1e6 / max(ov["ticks"], 1),
         f"tok/s={ov['tokens_per_sec']};kv_savings={result['kv']['savings_ratio']}x;"
         f"pool_util={result['kv']['paged']['pool_utilization']};"
-        f"prefix_chunks_saved={prefix['prefill_chunks_saved']}",
+        f"prefix_chunks_saved={prefix['prefill_chunks_saved']};"
+        f"traffic_goodput={result['traffic']['burst']['goodput_tokens_per_sec']}",
     )
 
 
@@ -436,7 +570,47 @@ def _lines(result: dict, path: str) -> list[str]:
                  f"peak_pages_below={pf['peak_pages_below_no_sharing']};"
                  f"prefill_chunks_saved={pf['prefill_chunks_saved']};"
                  f"ttft_speedup={pf['ttft_mean_speedup']}x"),
+    ] + [
+        csv_line(f"serve_traffic_{arrival}[{tag}]",
+                 tr["wall_s"] * 1e6 / max(tr["ticks"], 1),
+                 f"goodput={tr['goodput_tokens_per_sec']}tok/s;"
+                 f"ttft_p50={tr['ttft_p50_s']}s;ttft_p99={tr['ttft_p99_s']}s;"
+                 f"queue_peak={tr['queue_depth_peak']};"
+                 f"preempt={tr['preemptions']};resume={tr['resumes']};"
+                 f"cancel={tr['cancellations']}")
+        for arrival, tr in result["traffic"].items()
     ]
+
+
+def main_traffic(archs: list[str] | None = None) -> list[str]:
+    """The nightly traffic sweep: per arch, the open-loop harness under
+    Poisson and bursty arrivals (moderate scale, tight pool), written to
+    ``BENCH_serve_traffic_<arch>.json`` next to the serve artifacts."""
+    archs = archs or ["tinyllama-1.1b"]
+    lines: list[str] = []
+    for arch in archs:
+        cfg, mesh, params = _build(arch)
+        result = {
+            "arch": arch,
+            "traffic": {
+                arrival: run_traffic(cfg, mesh, params, arrival=arrival,
+                                     n_requests=16, num_pages=8)
+                for arrival in ("poisson", "burst")
+            },
+        }
+        path = _save(result, os.path.join(
+            os.path.dirname(RESULTS_DIR) or "results",
+            f"BENCH_serve_traffic_{arch}.json",
+        ))
+        lines += [
+            csv_line(f"serve_traffic_{arrival}[{arch}]",
+                     tr["wall_s"] * 1e6 / max(tr["ticks"], 1),
+                     f"goodput={tr['goodput_tokens_per_sec']}tok/s;"
+                     f"ttft_p99={tr['ttft_p99_s']}s;"
+                     f"preempt={tr['preemptions']};json={path}")
+            for arrival, tr in result["traffic"].items()
+        ]
+    return lines
 
 
 def main(archs: list[str] | None = None) -> list[str]:
@@ -454,6 +628,11 @@ def main(archs: list[str] | None = None) -> list[str]:
 
 
 if __name__ == "__main__":
+    argv = sys.argv[1:]
     print("name,us_per_call,derived")
-    for line in main(sys.argv[1:] or None):
-        print(line)
+    if argv and argv[0] == "--traffic":
+        for line in main_traffic(argv[1:] or None):
+            print(line)
+    else:
+        for line in main(argv or None):
+            print(line)

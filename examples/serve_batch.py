@@ -10,6 +10,12 @@ record suitable for the same CI report as training runs.
         # KV pages are prefilled once and mapped into every later request's
         # block table (copy-on-write at the divergence point); the demo
         # prints pages saved and prefill tokens skipped
+    PYTHONPATH=src python examples/serve_batch.py --traffic
+        # open-loop bursty traffic against a deliberately tight page pool:
+        # arrivals queue, the pool exhausts, victims preempt and
+        # recompute-resume (bitwise identically), some clients hang up
+        # mid-stream — the demo prints goodput, TTFT percentiles and the
+        # scheduler's pressure counters
 
 The paged layout (``ServeConfig.paged``, the ``--paged`` default here and
 in ``repro.launch.serve``) keeps attention KV in a shared pool of
@@ -49,8 +55,11 @@ from repro.serve.serve import BatchScheduler, ServeConfig
 def main():
     paged = "--dense" not in sys.argv[1:]
     shared_prefix = "--shared-prefix" in sys.argv[1:]
-    if shared_prefix and not paged:
-        raise SystemExit("--shared-prefix needs the paged layout")
+    traffic = "--traffic" in sys.argv[1:]
+    if (shared_prefix or traffic) and not paged:
+        raise SystemExit("--shared-prefix/--traffic need the paged layout")
+    if traffic:
+        return main_traffic()
     cfg = smoke_config("tinyllama-1.1b")
     mesh = make_host_mesh()
     params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
@@ -116,6 +125,50 @@ def main():
         print(f"{name} region: {reg.measurements.num_steps} steps, "
               f"dispatch efficiency {reg.pop.get('dispatch_efficiency', 0):.3f}")
     print(f"run record: {session.last_record_path}")
+
+
+def main_traffic():
+    """Open-loop bursty load against a pool sized well under the demand
+    peak: admission queueing, preemption + recompute-resume, and
+    mid-stream cancellations, measured the way BENCH_serve.json reports
+    them."""
+    from repro.serve.traffic import TrafficConfig, generate_workload, replay
+
+    cfg = smoke_config("tinyllama-1.1b")
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    session = repro.start(
+        "serve-traffic", backend="monitor", lb_sample_every=1,
+        resources=ResourceConfig(num_hosts=1,
+                                 devices_per_host=len(jax.devices())),
+    )
+    workload = generate_workload(TrafficConfig(
+        n_requests=12, seed=0, arrival="burst", rate=0.8, burst_mult=5.0,
+        prompt_short=(4, 10), prompt_long=(12, 20), max_new_short=(4, 8),
+        max_new_long=(8, 12), cancel_frac=0.2, vocab_hi=cfg.vocab,
+    ))
+    with compat.use_mesh(mesh), session:
+        sched = BatchScheduler(
+            cfg, mesh,
+            # 2 slots x 3 pages: bursts must queue, long requests must
+            # preempt — graceful degradation instead of a RuntimeError
+            ServeConfig(max_len=64, batch=2, prefill_chunk=8, paged=True,
+                        page_size=8, num_pages=6), params, session=session,
+        )
+        m = replay(sched, workload)
+    session.finalize("results/serve_traffic")
+    print(f"bursty traffic: {m['completed']} completed, "
+          f"{m['cancelled']} cancelled, {m['failed']} failed "
+          f"of {m['requests']} in {m['ticks']} ticks")
+    print(f"goodput {m['goodput_tokens_per_sec']} tok/s "
+          f"({m['good_tokens']} tokens); TTFT p50/p95/p99 "
+          f"{m['ttft_p50_s']}/{m['ttft_p95_s']}/{m['ttft_p99_s']} s; "
+          f"queue depth peak {m['queue_depth_peak']}")
+    print(f"pressure: {m['preemptions']} preemptions, {m['resumes']} "
+          f"resumes, {m['cancellations']} cancellations "
+          f"({m['kv']['pressure']['pages_freed_by_preempt']} pages freed "
+          f"by preempt)")
 
 
 if __name__ == "__main__":

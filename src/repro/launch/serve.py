@@ -6,6 +6,17 @@ of both phases.
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --requests 8 --max-new 8 --prefill-chunk 16 \
         --page-size 16 --talp-out talp/serve
+
+``--arrival poisson|burst`` swaps the fixed trace for the open-loop
+traffic harness (seeded arrivals, mixed lengths, priority classes,
+``--cancel-frac`` mid-stream cancellations) and reports goodput, TTFT
+percentiles and queue depth; ``--preempt-policy`` picks the victim order
+when the page pool exhausts (preempted requests park and recompute-resume
+bitwise identically):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --arrival burst --rate 0.8 --requests 16 \
+        --num-pages 8 --page-size 8 --cancel-frac 0.2
 """
 
 from __future__ import annotations
@@ -45,6 +56,21 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-trie-capacity", type=int, default=None,
                     help="max pages the prefix trie may pin (LRU-trimmed); "
                          "default: unbounded (pool pressure still evicts)")
+    ap.add_argument("--arrival", choices=("poisson", "burst"), default=None,
+                    help="open-loop traffic instead of the fixed trace: "
+                         "Poisson or Markov-modulated bursty arrivals from "
+                         "the seeded repro.serve.traffic harness (mixed "
+                         "lengths, priority classes, mid-stream cancels)")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per scheduler tick (calm state)")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="fraction of traffic requests that cancel "
+                         "mid-stream at a scheduled tick")
+    ap.add_argument("--preempt-policy", default="priority",
+                    choices=("priority", "pages", "progress", "never"),
+                    help="victim selection when the page pool exhausts: "
+                         "lowest-priority-first (default), most-pages, "
+                         "least-progress, or never (exhaustion raises)")
     ap.add_argument("--sample", action="store_true",
                     help="temperature/top-k sampling instead of greedy argmax")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -89,28 +115,53 @@ def main(argv=None) -> int:
                         prefix_trie_capacity=args.prefix_trie_capacity,
                         greedy=not args.sample,
                         temperature=args.temperature, top_k=args.top_k,
-                        sample_seed=args.sample_seed),
+                        sample_seed=args.sample_seed,
+                        preempt_policy=args.preempt_policy),
             params, session=session,
         )
-        # with prefix sharing on, give requests something to share: a
-        # common system prompt spanning several pages, divergent tails
-        system = (
-            rng.integers(4, cfg.vocab,
-                         size=min(4 * args.page_size, args.max_len // 2)).tolist()
-            if args.prefix_cache else []
-        )
-        for rid in range(args.requests):
-            prompt = system + rng.integers(4, cfg.vocab,
-                                           size=rng.integers(3, 10)).tolist()
-            sched.submit(prompt, request_id=rid, max_new=args.max_new)
-        steps = 0
-        while len(sched.completed) < args.requests and steps < 10 * args.max_len:
-            sched.step()
-            steps += 1
-        sched.drain()
+        if args.arrival:
+            # open-loop traffic: arrivals, lengths, priorities and cancels
+            # are a pure function of the seeded TrafficConfig
+            from repro.serve.traffic import (TrafficConfig, generate_workload,
+                                             replay)
+
+            workload = generate_workload(TrafficConfig(
+                n_requests=args.requests, arrival=args.arrival,
+                rate=args.rate, cancel_frac=args.cancel_frac,
+                vocab_hi=cfg.vocab,
+            ))
+            metrics = replay(sched, workload)
+            steps = metrics["ticks"]
+        else:
+            metrics = None
+            # with prefix sharing on, give requests something to share: a
+            # common system prompt spanning several pages, divergent tails
+            system = (
+                rng.integers(4, cfg.vocab,
+                             size=min(4 * args.page_size, args.max_len // 2)).tolist()
+                if args.prefix_cache else []
+            )
+            for rid in range(args.requests):
+                prompt = system + rng.integers(4, cfg.vocab,
+                                               size=rng.integers(3, 10)).tolist()
+                sched.submit(prompt, request_id=rid, max_new=args.max_new)
+            steps = 0
+            while len(sched.completed) < args.requests and steps < 10 * args.max_len:
+                sched.step()
+                steps += 1
+            sched.drain()
     print(f"[serve] completed {len(sched.completed)}/{args.requests} requests "
           f"in {steps} ticks ({sched.stats['decode_steps']} decode steps, "
           f"{sched.stats['prefill_chunks']} prefill chunks)")
+    if metrics is not None:
+        print(f"[serve] traffic ({args.arrival}): "
+              f"goodput {metrics['goodput_tokens_per_sec']} tok/s "
+              f"({metrics['good_tokens']} tokens), "
+              f"{metrics['cancelled']} cancelled, {metrics['failed']} failed; "
+              f"TTFT p50/p95/p99 {metrics['ttft_p50_s']}/"
+              f"{metrics['ttft_p95_s']}/{metrics['ttft_p99_s']} s; "
+              f"queue depth peak {metrics['queue_depth_peak']} "
+              f"(mean {metrics['queue_depth_mean']})")
     kv = sched.kv_cache_stats()
     if kv["layout"] == "paged":
         print(f"[serve] paged KV: {kv['kv_bytes']} pool bytes, "
@@ -128,6 +179,13 @@ def main(argv=None) -> int:
                   f"({pc['evicted_pages']} evicted)")
     else:
         print(f"[serve] dense KV: {kv['kv_bytes']} bytes")
+    pr = kv["pressure"]
+    print(f"[serve] pressure: {pr['preemptions']} preemptions "
+          f"({pr['pages_freed_by_preempt']} pages freed), "
+          f"{pr['resumes']} resumes, "
+          f"{pr['evictions_for_preempt']} trie evictions for preempt, "
+          f"{pr['cancellations']} cancellations, "
+          f"peak queue depth {pr['peak_queue_depth']}")
     session.finalize(args.talp_out or None)
     if session.last_record_path:
         print(f"[serve] TALP record: {session.last_record_path}")

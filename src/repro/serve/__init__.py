@@ -6,10 +6,18 @@ from repro.serve.serve import (
     make_serve_decode_step,
     serve_cache_pspecs,
     BatchScheduler,
+    RequestHandle,
+)
+from repro.serve.traffic import (
+    TrafficConfig,
+    TrafficRequest,
+    generate_workload,
+    replay,
 )
 
 __all__ = [
     "ServeConfig", "make_decode_step", "make_prefill_step",
     "make_prefill_chunk_step", "make_serve_decode_step",
-    "serve_cache_pspecs", "BatchScheduler",
+    "serve_cache_pspecs", "BatchScheduler", "RequestHandle",
+    "TrafficConfig", "TrafficRequest", "generate_workload", "replay",
 ]

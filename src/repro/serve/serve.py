@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Any
 
 import jax
@@ -30,11 +31,14 @@ class ServeConfig:
     batch: int
     # sampling: greedy argmax by default (bitwise-stable serving); with
     # greedy=False the decode and prefill-chunk steps sample on device with
-    # temperature (and optionally top_k) from a per-slot PRNG key carried on
-    # device, folded with the sampled position each step — a request's
-    # stream is a pure function of (params, prompt, slot, sample_seed),
-    # never of co-resident traffic, the overlap schedule, or who occupied
-    # the slot before.
+    # temperature (and optionally top_k) from a per-request PRNG key the
+    # scheduler writes into the slot's key row at attach
+    # (fold_in(PRNGKey(sample_seed), request_tag)), folded with the sampled
+    # position each step — a request's stream is a pure function of
+    # (params, prompt, request_id, sample_seed), never of co-resident
+    # traffic, the overlap schedule, who occupied the slot before, or which
+    # slot the request (re)attaches into — which is what makes a preempted
+    # request's resumed stream identical in any slot.
     temperature: float = 1.0
     greedy: bool = True
     top_k: int | None = None
@@ -73,6 +77,21 @@ class ServeConfig:
     # still evicts LRU entries nobody else reads).
     prefix_cache: bool = False
     prefix_trie_capacity: int | None = None
+    # preemption under memory pressure (paged only): when the page pool
+    # exhausts, pick a victim request by policy, release its pages, and park
+    # it for recompute-resume — re-prefill is cheap through the paged cache
+    # (and the PrefixCache/CoW path when enabled), and the resumed stream is
+    # bitwise identical to an uninterrupted run. Policies order victim
+    # candidates (never a request older/higher-priority than the one asking):
+    #   "priority"  lowest priority first, then most pages, then least
+    #               progress (the default — frees the most for the least
+    #               wasted work among the least important)
+    #   "pages"     most pages first (frees fastest)
+    #   "progress"  least generated tokens first (wastes the least recompute)
+    #   "never"     pre-preemption behavior: exhaustion unwinds the failed
+    #               attach (releasing every page it held — nothing leaks)
+    #               and raises
+    preempt_policy: str = "priority"
 
     def __post_init__(self):
         if self.prefix_cache and not self.paged:
@@ -80,6 +99,12 @@ class ServeConfig:
                 "prefix_cache=True requires paged=True: prefix sharing maps "
                 "pool pages into multiple slots' block tables, which the "
                 "dense (batch, max_len) layout cannot express"
+            )
+        if self.preempt_policy not in ("priority", "pages", "progress",
+                                       "never"):
+            raise ValueError(
+                f"preempt_policy must be one of priority|pages|progress|never,"
+                f" got {self.preempt_policy!r}"
             )
 
 
@@ -175,14 +200,16 @@ def _sample_tokens(logits, rng_keys, positions, *, greedy, temperature,
                    top_k, vocab):
     """On-device next-token selection for a batch of slots.
 
-    logits: (N, V); rng_keys: (N, 2) uint32 per-slot base keys; positions:
+    logits: (N, V); rng_keys: (N, 2) uint32 base keys (the scheduler
+    writes each attached request's own key into its slot's row); positions:
     (N,) int32 — the position whose logits are being sampled. Greedy (the
     default) is a plain argmax, bitwise identical to the historical
     behavior. Otherwise temperature (and optionally top-k) sampling with
     the key ``fold_in(rng_keys[i], positions[i])`` — STATELESS per step,
     so a request's sampled stream is a pure function of (params, prompt,
-    slot, sample_seed): it cannot depend on co-resident requests' decode
-    traffic, the overlap schedule, or who occupied the slot before.
+    request_id, sample_seed): it cannot depend on co-resident requests'
+    decode traffic, the overlap schedule, who occupied the slot before,
+    or which slot it (re)attaches into.
     Padded vocab ids are masked out. Returns tokens (N,) int32."""
     if greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -584,10 +611,94 @@ class PrefixCache:
             freed += self.allocator.free_pages - before
         return freed
 
+    def reclaimable(self) -> int:
+        """Pages the trie could free under pressure: nodes whose page has no
+        reader besides the trie itself (inner nodes become evictable as
+        their children go, so every refcount-1 node counts)."""
+        count = 0
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if self.allocator.refs.get(n.page, 0) == 1:
+                count += 1
+        return count
+
     def clear(self) -> None:
         """Drop every cached page (teardown / tests)."""
         while self._evict_lru():
             pass
+
+
+class _PoolPressure(Exception):
+    """Internal: an allocation could not be satisfied even after trie
+    eviction and victim preemption. ``fatal=False`` means the *requester*
+    should be parked (pressure will drop when older/higher-priority work
+    retires); ``fatal=True`` means no amount of waiting can help (policy
+    "never", or the requester is the only page holder left) — the caller
+    unwinds its partial allocation and re-raises as RuntimeError."""
+
+    def __init__(self, fatal: bool, msg: str):
+        super().__init__(msg)
+        self.fatal = fatal
+        self.msg = msg
+
+
+def _request_tag(request_id) -> int:
+    """Stable 31-bit tag for a request id, independent of submission order
+    and slot placement — the sampling key seed. Integer ids map to
+    themselves; anything else hashes via crc32 (Python's ``hash`` is
+    process-seeded for strings, which would break cross-run determinism)."""
+    if isinstance(request_id, (int, np.integer)):
+        return int(request_id) & 0x7FFFFFFF
+    return zlib.crc32(repr(request_id).encode()) & 0x7FFFFFFF
+
+
+class RequestHandle:
+    """Caller-facing view of a submitted request — the async half of the
+    admission API. ``submit()`` returns one immediately (arrival time is
+    decoupled from slot attach); the handle observes the request's
+    lifecycle (``queued -> prefilling -> decoding -> done``, with
+    ``preempted`` parking and ``cancelled``/``failed`` exits), exposes the
+    tokens generated so far, and can cancel mid-stream."""
+
+    __slots__ = ("_sched", "_req")
+
+    def __init__(self, sched: "BatchScheduler", req: dict):
+        self._sched = sched
+        self._req = req
+
+    @property
+    def request_id(self):
+        return self._req["id"]
+
+    @property
+    def status(self) -> str:
+        return self._req["_status"]
+
+    @property
+    def tokens(self) -> list[int]:
+        """Tokens generated (and flushed to the host) so far."""
+        return list(self._req["generated"])
+
+    @property
+    def done(self) -> bool:
+        return self._req["_status"] in ("done", "cancelled", "failed")
+
+    def cancel(self) -> bool:
+        return self._sched.cancel(self._req["id"])
+
+    def stream(self):
+        """Synchronous token stream (drives the scheduler); see
+        ``BatchScheduler.stream``."""
+        return self._sched.stream(self._req["id"])
+
+    def result(self) -> list[int]:
+        """Drive the scheduler until this request finishes; returns its
+        tokens."""
+        for _ in self.stream():
+            pass
+        return self.tokens
 
 
 class BatchScheduler:
@@ -633,12 +744,40 @@ class BatchScheduler:
     with sharing on or off — a shared page holds exactly the K/V the
     request would have prefilled itself.
 
+    **Admission and preemption** (the serving-under-pressure layer):
+    ``submit`` returns a ``RequestHandle`` immediately — arrival is
+    decoupled from slot attach by a priority admission queue (highest
+    priority first, FIFO within a class), and a strictly-higher-priority
+    arrival may preempt the lowest-priority occupant when every slot is
+    busy. When the page pool exhausts, a victim is chosen by
+    ``scfg.preempt_policy`` among requests *younger or lower-priority*
+    than the one asking (so preemption can never ping-pong), its pages are
+    released, and it is **parked for recompute-resume**: on re-attach the
+    prompt re-prefills through the normal chunked path (identical chunk
+    grid — and the PrefixCache fast-forward when enabled — writes bitwise
+    identical K/V), and the tokens it had already generated are *replayed*
+    through ordinary decode dispatches at their original positions (inputs
+    forced, outputs discarded) so attention KV and recurrent state are
+    recomputed by exactly the ops the uninterrupted run executed. A
+    resumed stream is therefore **bitwise identical** to an ample-pool
+    run, greedy or sampled (``benchmarks/run.py --check`` forces a
+    preemption and asserts it). Recurrent/hybrid archs follow the PR 6
+    ``done=0`` rule: resume re-runs state over every prompt token. If no
+    victim is eligible the requester parks itself; only a request that
+    could never fit even alone fails — with its partial allocation fully
+    released first (nothing leaks). ``cancel`` frees a request's pages
+    mid-stream without touching co-resident slots; ``stream`` /
+    ``stream_async`` yield tokens as they flush.
+
     Sampling: greedy argmax by default (bitwise-stable). With
     ``greedy=False``, temperature/top-k sampling runs inside the decode and
-    prefill-chunk steps from per-slot base PRNG keys carried on device,
-    folded with the sampled position each step (stateless — nothing to
-    reset on slot reuse) — a request's stream depends only on (params,
-    prompt, slot, sample_seed).
+    prefill-chunk steps from per-request base PRNG keys carried on device
+    (``fold_in(PRNGKey(sample_seed), request_tag)``, written into the
+    slot's key row at attach), folded with the sampled position each step
+    (stateless — nothing to reset on slot reuse) — a request's stream
+    depends only on (params, prompt, request_id, sample_seed), never on
+    the slot it lands in, co-resident traffic, or a preemption/resume
+    cycle in the middle of it.
 
     Token readback is **deferred and batched**: decode steps and prefill
     completions append on-device token arrays to a pending list, and one
@@ -728,15 +867,16 @@ class BatchScheduler:
             self._alloc = None
             self._prefix = None
             self.caches = T.init_cache(cfg, scfg.batch, scfg.max_len)
-        # per-slot sampling base keys, carried on device and STATIC for the
-        # scheduler's lifetime: each sampling step folds the slot's key with
-        # the sampled position, so a request's stream is a pure function of
-        # (params, prompt, slot, sample_seed) — independent of co-resident
-        # traffic, the overlap schedule, and previous slot occupants
-        # (greedy never reads them)
-        self.rng_keys = jax.random.split(
-            jax.random.PRNGKey(scfg.sample_seed), scfg.batch
-        )
+        # per-slot sampling key rows, carried on device. In sampled mode the
+        # attach overwrites the slot's row with the REQUEST's key
+        # (fold_in(base_key, request_tag)), and each sampling step folds that
+        # with the sampled position — so a request's stream is a pure
+        # function of (params, prompt, request_id, sample_seed), independent
+        # of slot placement (a preempted request may resume elsewhere),
+        # co-resident traffic, and the overlap schedule (greedy never reads
+        # the keys)
+        self._base_key = jax.random.PRNGKey(scfg.sample_seed)
+        self.rng_keys = jax.random.split(self._base_key, scfg.batch)
         # fresh-state template for slot reuse: unlike attention KV (stale
         # lines are masked by cache_len/kv_len), recurrent state has no
         # positional masking, so a reattached slot must have its carries
@@ -752,10 +892,18 @@ class BatchScheduler:
         self._has_recurrent = any(l is not None for l in self._fresh_state)
         self._dirty: set[int] = set()  # slots whose state may be non-fresh
         self.tokens = jnp.zeros((scfg.batch, 1), jnp.int32)
-        self.queue: list[dict] = []
+        self.queue: list[dict] = []    # admission queue: priority, FIFO within
         self.active: list[dict | None] = [None] * scfg.batch   # decoding slots
         self.pos = np.zeros(scfg.batch, np.int32)              # per-slot position
         self.completed: list[dict] = []
+        self.cancelled: list[dict] = []   # cancelled mid-stream
+        self.failed: list[dict] = []      # fatal pool pressure (unwound clean)
+        self._parked: list[dict] = []     # preempted, awaiting recompute-resume
+        self._by_id: dict = {}            # request_id -> req (handles, cancel)
+        self._seq = 0                     # admission order: FIFO within a class
+        # recompute-resume replay: slot -> generated tokens still to re-feed
+        # through decode at their original positions (outputs discarded)
+        self._replay: dict[int, list[int]] = {}
         # in-flight prefills: FIFO of {"req","slot","prompt","done"}
         self._prefills: list[dict] = []
         self._prefilling: list[dict | None] = [None] * scfg.batch
@@ -778,9 +926,20 @@ class BatchScheduler:
             # asserts is overlap_ticks > 0 and decode_after_prefill_ticks
             # == 0; the stop-the-world baseline trips the latter.
             "overlap_ticks": 0, "decode_after_prefill_ticks": 0,
+            # pressure accounting (the serving-under-load counters surfaced
+            # by kv_cache_stats()["pressure"] and launch/serve.py)
+            "preemptions": 0, "resumes": 0, "cancellations": 0,
+            "pages_freed_by_preempt": 0, "evictions_for_preempt": 0,
+            "peak_queue_depth": 0,
         }
 
-    def submit(self, prompt_tokens, request_id, max_new: int = 32) -> None:
+    def submit(self, prompt_tokens, request_id, max_new: int = 32,
+               priority: int = 0) -> RequestHandle:
+        """Admit a request; returns a ``RequestHandle`` immediately (arrival
+        is decoupled from slot attach by the admission queue). ``priority``
+        orders admission — higher first, FIFO within a class — and bounds
+        preemption: a request can only ever evict strictly-lower-priority
+        or strictly-younger work."""
         prompt = list(prompt_tokens)
         if max_new < 1:
             # the first generated token falls out of the prefill logits
@@ -799,10 +958,121 @@ class BatchScheduler:
                 f"(prompt {len(prompt)}, max_new {max_new}) but "
                 f"max_len={self.scfg.max_len}"
             )
-        self.queue.append(
-            {"id": request_id, "prompt": prompt,
-             "max_new": max_new, "generated": [], "_pending": 0}
+        if self._alloc is not None:
+            # a request that cannot fit even with the pool to itself would
+            # otherwise park forever under the preemption policy (and the
+            # admission queue hides the old immediate RuntimeError) — reject
+            # it at the door like the max_len check above
+            pages = -(-need // self.scfg.page_size)
+            if pages > self._alloc.num_pages:
+                raise ValueError(
+                    f"request {request_id!r} needs {pages} page(s) "
+                    f"(prompt {len(prompt)}, max_new {max_new}, page_size "
+                    f"{self.scfg.page_size}) but the pool only holds "
+                    f"{self._alloc.num_pages}; raise ServeConfig.num_pages "
+                    f"(--num-pages)"
+                )
+        req = {
+            "id": request_id, "prompt": prompt, "max_new": max_new,
+            "generated": [], "_pending": 0, "priority": int(priority),
+            "_seq": self._seq, "_tag": _request_tag(request_id),
+            "_status": "queued", "_cancelled": False,
+        }
+        self._seq += 1
+        self.queue.append(req)
+        self._by_id[request_id] = req
+        self.stats["peak_queue_depth"] = max(
+            self.stats["peak_queue_depth"],
+            len(self.queue) + len(self._parked),
         )
+        return RequestHandle(self, req)
+
+    def cancel(self, request_id) -> bool:
+        """Cancel mid-stream: remove the request from whichever pool holds
+        it (admission queue, parked set, in-flight prefill, or a decoding
+        slot), release its pages, and close its stream. Prefix-trie pins
+        and co-resident slots are untouched — their token streams are
+        bitwise unaffected. Tokens already flushed stay on the handle;
+        dispatched-but-unflushed rows are dropped at the next flush.
+        Returns True if the request was still live."""
+        req = self._by_id.get(request_id)
+        if req is None or req["_status"] in ("done", "cancelled", "failed"):
+            return False
+        req["_cancelled"] = True
+        if req in self.queue:
+            self.queue.remove(req)
+        elif req in self._parked:
+            self._parked.remove(req)
+        else:
+            for slot in range(self.scfg.batch):
+                task = self._prefilling[slot]
+                if self.active[slot] is req or (
+                    task is not None and task["req"] is req
+                ):
+                    if task is not None and task["req"] is req:
+                        self._prefills.remove(task)
+                        self._prefilling[slot] = None
+                    self.active[slot] = None
+                    self._release_slot_pages(slot)
+                    self._seeds.pop(slot, None)
+                    self._replay.pop(slot, None)
+                    break
+        req["_status"] = "cancelled"
+        self.cancelled.append(req)
+        self.stats["cancellations"] += 1
+        return True
+
+    def flush(self) -> None:
+        """Materialize pending tokens now (streaming callers; batch callers
+        can keep relying on the automatic flush boundaries)."""
+        self._flush()
+
+    def stream(self, request_id):
+        """Generator of ``request_id``'s tokens, driving the scheduler:
+        each iteration steps and flushes until new tokens land. Ends when
+        the request completes (or is cancelled / fails). Co-resident
+        requests advance as a side effect, exactly as in a plain step
+        loop — several interleaved ``stream`` consumers are fine."""
+        req = self._by_id.get(request_id)
+        if req is None:
+            raise KeyError(f"unknown request {request_id!r}")
+        sent, idle = 0, 0
+        while True:
+            while sent < len(req["generated"]):
+                idle = 0
+                yield req["generated"][sent]
+                sent += 1
+            if req["_status"] in ("done", "cancelled", "failed"):
+                return
+            self.step()
+            self._flush()
+            idle += 1
+            if idle > 100_000:  # insurance against a scheduling livelock
+                raise RuntimeError(
+                    f"request {request_id!r} stalled in stream() "
+                    f"(status {req['_status']!r})"
+                )
+
+    async def stream_async(self, request_id):
+        """Async variant of ``stream``: yields control to the event loop
+        between ticks, so several ``stream_async`` consumers (one per
+        request) interleave over one scheduler — whichever consumer runs
+        next drives the shared tick, and every slot advances."""
+        import asyncio
+
+        req = self._by_id.get(request_id)
+        if req is None:
+            raise KeyError(f"unknown request {request_id!r}")
+        sent = 0
+        while True:
+            while sent < len(req["generated"]):
+                yield req["generated"][sent]
+                sent += 1
+            if req["_status"] in ("done", "cancelled", "failed"):
+                return
+            self.step()
+            self._flush()
+            await asyncio.sleep(0)
 
     # -- attach / prefill ------------------------------------------------
 
@@ -810,30 +1080,221 @@ class BatchScheduler:
         return self.active[slot] is None and self._prefilling[slot] is None
 
     def _attach(self) -> None:
-        reused = []
+        if self.scfg.preempt_policy != "never":
+            self._preempt_for_priority()
+        if not (self.queue or self._parked):
+            return
+        order = lambda r: (-r["priority"], r["_seq"])
+        self.queue.sort(key=order)    # stable: FIFO within a priority class
+        self._parked.sort(key=order)
+        reused: list[int] = []
         for slot in range(self.scfg.batch):
-            if self._free(slot) and self.queue:
-                req = self.queue.pop(0)
-                self.pos[slot] = 0
-                if slot in self._dirty:
-                    reused.append(slot)
-                self._dirty.add(slot)
-                if not req["prompt"]:
-                    # nothing to prefill: decode from an empty cache off a
-                    # constant BOS-like seed
-                    self._seeds[slot] = 0
-                    self.active[slot] = req
-                else:
-                    # drop any stale seed a just-retired request left queued
-                    self._seeds.pop(slot, None)
-                    task = {"req": req, "slot": slot, "done": 0,
-                            "prompt": np.asarray(req["prompt"], np.int32)}
-                    if self._prefix is not None:
-                        task["done"] = self._attach_prefix(slot, req)
-                    self._prefilling[slot] = task
-                    self._prefills.append(task)
+            if not self._free(slot):
+                continue
+            req = self._next_admittable()
+            if req is None:
+                break
+            if not self._attach_one(slot, req, reused):
+                break  # attach-time pool pressure: try again next tick
         if reused:
             self._reset_slots(reused)
+
+    def _next_admittable(self) -> dict | None:
+        """Best waiter across the admission queue and the parked set, on
+        (priority desc, arrival seq asc) — a parked request keeps its
+        original seq, so at equal priority it naturally outranks younger
+        queued arrivals. Parked candidates must also pass the resume gate
+        (enough free or trie-reclaimable pages for prompt + history), so a
+        resume cannot immediately thrash back out."""
+        order = lambda r: (-r["priority"], r["_seq"])
+        parked = next((r for r in self._parked if self._resume_fits(r)), None)
+        queued = self.queue[0] if self.queue else None
+        if parked is not None and (
+            queued is None or order(parked) <= order(queued)
+        ):
+            self._parked.remove(parked)
+            return parked
+        if queued is not None:
+            return self.queue.pop(0)
+        return None
+
+    def _resume_fits(self, req) -> bool:
+        if self._alloc is None:
+            return True
+        need = len(req["prompt"]) + max(len(req["generated"]), 1)
+        need = -(-need // self.scfg.page_size)
+        avail = self._alloc.free_pages
+        if self._prefix is not None:
+            avail += self._prefix.reclaimable()
+        return avail >= need
+
+    def _attach_one(self, slot: int, req: dict, reused: list[int]) -> bool:
+        """Attach ``req`` to the free ``slot``; False on attach-time pool
+        pressure (the request is put back where it came from, fully
+        unwound). A request with generated history is a recompute-resume:
+        the prompt re-prefills on the normal chunk grid and the history is
+        scheduled for decode replay."""
+        resume = req["_status"] == "preempted"
+        self.pos[slot] = 0
+        if slot in self._dirty:
+            reused.append(slot)
+        self._dirty.add(slot)
+        if not self.scfg.greedy:
+            # the slot's sampling key row becomes the REQUEST's key, so a
+            # resumed request keeps its exact stream in any slot
+            self.rng_keys = self.rng_keys.at[slot].set(
+                jax.random.fold_in(self._base_key, req["_tag"])
+            )
+        if not req["prompt"]:
+            # nothing to prefill: decode from an empty cache off a constant
+            # BOS-like seed; on resume, replay the WHOLE history (the seed
+            # token regenerates generated[0], which is discarded)
+            self._seeds[slot] = 0
+            if req["generated"]:
+                self._replay[slot] = list(req["generated"])
+            self.active[slot] = req
+            req["_status"] = "decoding"
+            if resume:
+                self.stats["resumes"] += 1
+            return True
+        # drop any stale seed a just-retired request left queued
+        self._seeds.pop(slot, None)
+        task = {"req": req, "slot": slot, "done": 0,
+                "prompt": np.asarray(req["prompt"], np.int32)}
+        if self._prefix is not None:
+            try:
+                task["done"] = self._attach_prefix(slot, req)
+            except _PoolPressure as e:
+                # unwind the partial page mapping — a failed attach leaks
+                # nothing — and put the request back
+                self._release_slot_pages(slot)
+                if e.fatal:
+                    req["_status"] = "failed"
+                    self.failed.append(req)
+                    raise RuntimeError(
+                        f"{e.msg} [kv_cache_stats: {self.kv_cache_stats()}]"
+                    ) from None
+                if resume:
+                    self._parked.append(req)
+                else:
+                    req["_status"] = "queued"
+                    self.queue.append(req)
+                return False
+        req["_status"] = "prefilling"
+        if resume:
+            self.stats["resumes"] += 1
+        self._prefilling[slot] = task
+        self._prefills.append(task)
+        return True
+
+    # -- preemption (serving under memory pressure) ----------------------
+
+    def _occupant(self, slot: int) -> dict | None:
+        task = self._prefilling[slot]
+        return self.active[slot] or (task["req"] if task else None)
+
+    def _preempt_for_priority(self) -> None:
+        """A strictly-higher-priority waiter stuck behind a fully-busy
+        batch evicts the lowest-priority occupant — one per tick (attach
+        runs every tick), so a burst of high-priority arrivals drains the
+        batch incrementally instead of thrashing it in one go."""
+        waiters = [r["priority"] for r in self.queue]
+        waiters += [r["priority"] for r in self._parked
+                    if self._resume_fits(r)]
+        if not waiters or any(
+            self._free(s) for s in range(self.scfg.batch)
+        ):
+            return
+        top = max(waiters)
+        occ = [
+            (r["priority"], -r["_seq"], slot)
+            for slot in range(self.scfg.batch)
+            if (r := self._occupant(slot)) is not None and r["priority"] < top
+        ]
+        if occ:
+            self._preempt(min(occ)[2])  # lowest priority, youngest tiebreak
+
+    def _pick_victim(self, requester: dict) -> int | None:
+        """Pool-pressure victim for ``requester``, by ``preempt_policy``.
+        Only strictly lower-priority — or equal-priority strictly younger —
+        occupants are eligible, so preemption is a strict order and can
+        never ping-pong (the oldest highest-priority request always makes
+        progress). Slots holding no pages are skipped: evicting them frees
+        nothing."""
+        rp, rs = requester["priority"], requester["_seq"]
+        cand = []
+        for slot in range(self.scfg.batch):
+            occ = self._occupant(slot)
+            if occ is None or occ is requester or not self._slot_pages[slot]:
+                continue
+            if occ["priority"] < rp or (
+                occ["priority"] == rp and occ["_seq"] > rs
+            ):
+                cand.append((slot, occ))
+        if not cand:
+            return None
+        policy = self.scfg.preempt_policy
+        if policy == "pages":        # free the most memory per eviction
+            key = lambda c: -len(self._slot_pages[c[0]])
+        elif policy == "progress":   # least work lost to recompute
+            key = lambda c: len(c[1]["generated"]) + c[1]["_pending"]
+        else:                        # "priority": cheapest class first, then
+            key = lambda c: (        # most pages, then least progress
+                c[1]["priority"],
+                -len(self._slot_pages[c[0]]),
+                len(c[1]["generated"]) + c[1]["_pending"],
+            )
+        return min(cand, key=key)[0]
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request for recompute-resume: flush first (its
+        generated history must be complete on the host — replay re-feeds
+        it), release every page it holds, and park it. The prefix trie
+        keeps its own pins, so a preempted request's shared prompt pages
+        stay cached for its resume (and for everyone else)."""
+        self._flush()
+        req = self._occupant(slot)
+        if req is None:
+            return  # the flush retired it — pressure already relieved
+        with self.session.region("preempt"):
+            task = self._prefilling[slot]
+            freed = len(self._slot_pages[slot]) if self._alloc else 0
+            if task is not None:
+                self._prefills.remove(task)
+                self._prefilling[slot] = None
+            self.active[slot] = None
+            self._release_slot_pages(slot)
+            self._seeds.pop(slot, None)
+            self._replay.pop(slot, None)
+            req["_status"] = "preempted"
+            self._parked.append(req)
+            self.stats["preemptions"] += 1
+            self.stats["pages_freed_by_preempt"] += freed
+
+    def _handle_pressure(self, slot: int, e: _PoolPressure) -> None:
+        """An allocation for ``slot``'s own request failed even after trie
+        eviction and victim preemption. Non-fatal: park the requester
+        itself (pressure relieves as older/higher-priority work retires).
+        Fatal: unwind everything the request holds — nothing leaks — and
+        surface the exhaustion."""
+        if not e.fatal:
+            self._preempt(slot)
+            return
+        task = self._prefilling[slot]
+        req = self._occupant(slot)
+        if task is not None:
+            self._prefills.remove(task)
+            self._prefilling[slot] = None
+        self.active[slot] = None
+        self._release_slot_pages(slot)
+        self._seeds.pop(slot, None)
+        self._replay.pop(slot, None)
+        if req is not None:
+            req["_status"] = "failed"
+            self.failed.append(req)
+        raise RuntimeError(
+            f"{e.msg} [kv_cache_stats: {self.kv_cache_stats()}]"
+        ) from None
 
     def _reset_slots(self, slots: list[int]) -> None:
         """Restore reused slots' recurrent-state cache rows (SSM/conv/xLSTM
@@ -859,21 +1320,50 @@ class BatchScheduler:
 
     # -- paged-pool bookkeeping ------------------------------------------
 
-    def _alloc_pages(self, n: int, owner) -> list[int]:
-        """Allocate through the prefix cache's eviction hook: under pool
-        pressure, LRU trie entries no live request reads are evicted
-        first; if the pool is still short the exhaustion error carries the
-        full kv/sharing accounting, so OOM reports are self-explanatory."""
-        if self._prefix is not None and n > self._alloc.free_pages:
-            self._prefix.evict_for(n - self._alloc.free_pages)
-        try:
-            return self._alloc.alloc(n, owner=owner)
-        except RuntimeError as e:
-            raise RuntimeError(
-                f"{e} [kv_cache_stats: {self.kv_cache_stats()}]"
-            ) from None
+    def _alloc_pages(self, n: int, req: dict) -> list[int]:
+        """Allocate for ``req``, escalating under pool pressure: (1) evict
+        LRU prefix-trie entries no live request reads, (2) preempt a victim
+        chosen by ``scfg.preempt_policy`` (strictly younger or
+        lower-priority than the requester), repeat. If the pool is still
+        short, raise ``_PoolPressure`` — non-fatal parks the requester for
+        recompute-resume; fatal (policy "never", or nobody else holds
+        anything reclaimable) unwinds and surfaces as RuntimeError with the
+        full kv/sharing accounting."""
+        while True:
+            if self._prefix is not None and n > self._alloc.free_pages:
+                freed = self._prefix.evict_for(n - self._alloc.free_pages)
+                self.stats["evictions_for_preempt"] += freed
+            if n <= self._alloc.free_pages:
+                return self._alloc.alloc(n, owner=req["id"])
+            victim = (
+                self._pick_victim(req)
+                if self.scfg.preempt_policy != "never" else None
+            )
+            if victim is not None:
+                self._preempt(victim)
+                continue
+            others_hold = any(
+                self._slot_pages[s]
+                for s in range(self.scfg.batch)
+                if (occ := self._occupant(s)) is not None and occ is not req
+            )
+            reclaim = (
+                self._prefix.reclaimable() if self._prefix is not None else 0
+            )
+            fatal = self.scfg.preempt_policy == "never" or (
+                not others_hold and reclaim == 0
+            )
+            raise _PoolPressure(
+                fatal,
+                f"paged KV pool exhausted: request {req['id']!r} needs {n} "
+                f"more page(s) but only {self._alloc.free_pages} of "
+                f"{self._alloc.num_pages} are free and no victim is "
+                f"eligible (preempt_policy={self.scfg.preempt_policy!r}); "
+                f"raise ServeConfig.num_pages (--num-pages) or retire "
+                f"requests sooner",
+            )
 
-    def _ensure_pages(self, slot: int, last_pos: int, owner) -> None:
+    def _ensure_pages(self, slot: int, last_pos: int, req: dict) -> None:
         """Grow ``slot``'s block table so position ``last_pos`` (inclusive)
         is backed by a physical page; no-op when already covered (and in
         dense mode)."""
@@ -883,7 +1373,7 @@ class BatchScheduler:
         have = len(self._slot_pages[slot])
         if need <= have:
             return
-        new = self._alloc_pages(need - have, owner)
+        new = self._alloc_pages(need - have, req)
         self._tables[slot, have:need] = new
         self._slot_pages[slot].extend(new)
         self._tables_dirty = True
@@ -940,7 +1430,7 @@ class BatchScheduler:
             self._slot_pages[slot].append(node.page)
             self._prefix._touch(node)
         if cow_donor is not None:
-            new = self._alloc_pages(1, req["id"])[0]
+            new = self._alloc_pages(1, req)[0]
             self._tables[slot, len(self._slot_pages[slot])] = new
             self._slot_pages[slot].append(new)
             self._prefix._touch(cow_donor)
@@ -1021,6 +1511,14 @@ class BatchScheduler:
                     "inserted_pages": st["inserted_pages"],
                     "evicted_pages": st["evicted_pages"],
                 }
+        out["pressure"] = {
+            k: self.stats[k]
+            for k in ("preemptions", "resumes", "cancellations",
+                      "pages_freed_by_preempt", "evictions_for_preempt",
+                      "peak_queue_depth")
+        }
+        out["pressure"]["queued"] = len(self.queue)
+        out["pressure"]["parked"] = len(self._parked)
         return out
 
     def _dispatch_prefill_chunk(self) -> None:
@@ -1032,15 +1530,22 @@ class BatchScheduler:
         L = min(C, len(prompt) - start)
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :L] = prompt[start : start + L]
+        if self.scfg.paged:
+            # back the chunk's positions [start, start+L) with pool pages
+            # before anything writes them; pool pressure here may preempt a
+            # victim, park this request, or (fatal) unwind and raise —
+            # either way this chunk does not dispatch
+            try:
+                self._ensure_pages(task["slot"], start + L - 1, task["req"])
+            except _PoolPressure as e:
+                self._handle_pressure(task["slot"], e)
+                return
         args = (
             self.params, jnp.asarray(chunk),
             jnp.asarray([start], jnp.int32), jnp.asarray([L], jnp.int32),
             jnp.asarray(task["slot"], jnp.int32), self.caches,
         )
         if self.scfg.paged:
-            # back the chunk's positions [start, start+L) with pool pages
-            # before anything writes them
-            self._ensure_pages(task["slot"], start + L - 1, task["req"]["id"])
             args += (self._tables_device(),)
         next_tok, self.caches = self.prefill(*args, self.rng_keys)
         task["done"] = start + L
@@ -1055,13 +1560,24 @@ class BatchScheduler:
                 # pages re-touch their nodes, fresh/CoW pages insert new
                 # ones (each pinned with a trie-owned reference)
                 self._prefix.insert(req["prompt"], self._slot_pages[slot])
-            self._prefills.pop(0)
+            self._prefills.remove(task)
             self._prefilling[slot] = None
             self.active[slot] = req
+            req["_status"] = "decoding"
             self.pos[slot] = len(prompt)
-            req["_pending"] += 1
-            self._pending.append((next_tok.reshape(1, 1), [req]))
-            self._seeds[slot] = next_tok[0]
+            if req["generated"]:
+                # recompute-resume: the chunk grid above rebuilt the prompt
+                # KV bitwise; the re-sampled first token is generated[0]
+                # again, already on the host — discard it and schedule the
+                # rest of the history for decode replay (inputs forced,
+                # outputs discarded)
+                self._seeds[slot] = req["generated"][0]
+                if len(req["generated"]) > 1:
+                    self._replay[slot] = list(req["generated"][1:])
+            else:
+                req["_pending"] += 1
+                self._pending.append((next_tok.reshape(1, 1), [req]))
+                self._seeds[slot] = next_tok[0]
 
     def _apply_seeds(self) -> None:
         """All newly seeded slots in ONE vectorized device-side scatter —
@@ -1090,8 +1606,10 @@ class BatchScheduler:
             for row, req in enumerate(reqmap):
                 if req is None:
                     continue
-                req["generated"].append(int(toks[row, 0]))
                 req["_pending"] -= 1
+                if req["_cancelled"]:
+                    continue  # cancelled mid-stream: drop the dispatched row
+                req["generated"].append(int(toks[row, 0]))
         eos = self.scfg.eos_id
         for slot, req in enumerate(self.active):
             if req is None:
@@ -1103,17 +1621,44 @@ class BatchScheduler:
                 req["generated"] = req["generated"][: req["generated"].index(eos) + 1]
                 done = True
             if done:
+                req["_status"] = "done"
                 self.completed.append(req)
                 self.active[slot] = None
                 self._release_slot_pages(slot)
+                self._replay.pop(slot, None)
 
     def drain(self) -> None:
-        """Finish in-flight (partial) prefills and flush outstanding
-        readbacks (end of serving loop / inspection)."""
-        with compat.use_mesh(self.mesh):
-            while self._prefills:
-                self._dispatch_prefill_chunk()
-            self._apply_seeds()
+        """Run the scheduler to quiescence: every queued, parked,
+        prefilling and decoding request completes (the admission queue and
+        parked set are serviced through ordinary ``step`` ticks — drain is
+        exactly "keep serving until the work is gone"), then flush the last
+        readbacks. Cancelled requests' dispatched-but-unflushed rows are
+        materialized and dropped on the way."""
+        live = (
+            self.queue + self._parked
+            + [r for r in self.active if r is not None]
+            + [t["req"] for t in self._prefills]
+        )
+        # generous tick budget: prefill chunks + decode budget per request,
+        # with headroom for preemption/replay rounds (bounded — the oldest
+        # highest-priority request always makes progress)
+        budget = 64 + (len(live) + 2) * sum(
+            r["max_new"] + len(r["prompt"]) // max(self.scfg.prefill_chunk, 1)
+            + len(r["prompt"]) + 1
+            for r in live
+        )
+        ticks = 0
+        while (self.queue or self._parked or self._prefills
+               or any(r is not None for r in self.active)):
+            self.step()
+            ticks += 1
+            if ticks > budget:
+                raise RuntimeError(
+                    f"drain() reached no quiescence after {ticks} ticks: "
+                    f"queued={len(self.queue)} parked={len(self._parked)} "
+                    f"active={sum(r is not None for r in self.active)} "
+                    f"prefilling={len(self._prefills)}"
+                )
         self._flush()
 
     # -- the tick --------------------------------------------------------
@@ -1135,19 +1680,24 @@ class BatchScheduler:
                     jax.block_until_ready(self.tokens)
             else:
                 self._apply_seeds()  # seeds collected since last tick
+            if self.scfg.paged:
+                # this step writes each active slot's K/V at pos[slot]: back
+                # any page boundary being crossed BEFORE snapshotting the
+                # active set — pool pressure here can preempt (remove) a
+                # victim slot mid-loop, or park the requesting slot itself
+                for slot in range(self.scfg.batch):
+                    req = self.active[slot]
+                    if req is not None:
+                        try:
+                            self._ensure_pages(slot, int(self.pos[slot]), req)
+                        except _PoolPressure as e:
+                            self._handle_pressure(slot, e)
             decoding = list(self.active)
             if bool(self._prefills) and any(r is not None for r in decoding):
                 self.stats["overlap_ticks"] += 1
             if any(r is not None for r in decoding):
                 active = np.asarray([r is not None for r in decoding])
                 if self.scfg.paged:
-                    # this step writes each active slot's K/V at pos[slot]:
-                    # back any page boundary being crossed first
-                    for slot, req in enumerate(decoding):
-                        if req is not None:
-                            self._ensure_pages(
-                                slot, int(self.pos[slot]), req["id"]
-                            )
                     args = (jnp.asarray(active), self.caches,
                             self._tables_device())
                 else:
@@ -1167,10 +1717,27 @@ class BatchScheduler:
                     # the decode pipeline waited on it
                     self.stats["decode_after_prefill_ticks"] += 1
                 self.pos[active] += 1
-                self._pending.append((self.tokens, decoding))
-                for req in decoding:
+                # recompute-resume replay: a replaying slot's output is a
+                # token already in its ``generated`` history — discard it
+                # (None row, no _pending) instead of double-counting it
+                reqmap = [
+                    None if (r is not None and s in self._replay) else r
+                    for s, r in enumerate(decoding)
+                ]
+                self._pending.append((self.tokens, reqmap))
+                for req in reqmap:
                     if req is not None:
                         req["_pending"] += 1
+                # advance the forced-input schedule: the popped history
+                # token overrides the sampled output as next tick's input
+                # for its slot; when the list empties, the NEXT output is
+                # the first genuinely new token and is kept
+                for slot in list(self._replay):
+                    if decoding[slot] is not None:
+                        hist = self._replay[slot]
+                        self._seeds[slot] = hist.pop(0)
+                        if not hist:
+                            del self._replay[slot]
             if self.scfg.overlap and self._prefills:
                 self._dispatch_prefill_chunk()
         flush_due = any(

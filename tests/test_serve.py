@@ -260,25 +260,30 @@ def test_eos_retirement_before_max_new():
     assert ticks < 12  # the slot was freed well before the budget
 
 
-def test_drain_flushes_partial_prefills():
-    """drain() completes in-flight (partial) prefills so a submitted request
-    always yields its first token, even if the serve loop stops early."""
+def test_drain_runs_to_quiescence():
+    """drain() completes EVERYTHING still in the system — a mid-flight
+    (partial) prefill AND requests still waiting in the admission queue
+    that never attached — so a stopped serve loop never strands work."""
     cfg, mesh, params = _serve_fixtures()
     prompt = list(range(4, 16))  # 12 tokens -> 3 chunks of 4
     with mesh:
         sched = BatchScheduler(
             cfg, mesh,
-            ServeConfig(max_len=64, batch=2, prefill_chunk=4), params,
+            ServeConfig(max_len=64, batch=1, prefill_chunk=4), params,
         )
         sched.submit(prompt, request_id=0, max_new=8)
         sched.step()  # one tick: exactly one chunk in
         assert sched._prefills and sched._prefills[0]["done"] == 4
+        # a second request arrives and (batch=1) stays in the admission
+        # queue — the old drain would have silently dropped it
+        sched.submit([20, 21, 22], request_id=1, max_new=4)
+        assert sched.queue
         sched.drain()
-        assert not sched._prefills
-        (req,) = [r for r in sched.active if r is not None]
-        assert req["generated"] == _reference_generate(cfg, mesh, params, prompt, 1)
-        slot = sched.active.index(req)
-        assert sched.pos[slot] == len(prompt)
+        assert not sched._prefills and not sched.queue
+        assert all(r is None for r in sched.active)
+    got = {r["id"]: r["generated"] for r in sched.completed}
+    assert got[0] == _reference_generate(cfg, mesh, params, prompt, 8)
+    assert got[1] == _reference_generate(cfg, mesh, params, [20, 21, 22], 4)
 
 
 def test_overlap_on_off_identical_tokens_and_no_decode_gap():
@@ -574,34 +579,43 @@ def test_paged_allocator_frees_and_reallocates_on_slot_reuse():
 
 
 def test_paged_pool_exhaustion_raises_clean_error():
-    """A full pool must fail loudly BEFORE handing out any page — never
-    remap a neighbor's pages. The neighbor keeps decoding correctly after
-    the failed attach is cancelled."""
+    """With preempt_policy="never" a dry pool must fail the requester
+    loudly BEFORE handing out any page — never remap a neighbor's pages —
+    and the failed request must be fully unwound (every page it already
+    held released, no leak). The neighbor keeps running correctly
+    afterwards. Pool math: 3 pages of 8; "a" (prompt 4, max_new 12) holds
+    page 0 and asks for its second page at decode position 8 on the tick
+    after "b"'s prefill (20 tokens) has taken the other two — "a" fails,
+    "b" completes against the reference."""
     cfg, mesh, params = _serve_fixtures()
-    prompt_a, prompt_b = [5, 6, 7, 8], list(range(4, 24))  # b needs 3 pages
+    prompt_a, prompt_b = [5, 6, 7, 8], list(range(4, 24))
     with mesh:
         sched = BatchScheduler(
             cfg, mesh,
             ServeConfig(max_len=64, batch=2, prefill_chunk=4,
-                        paged=True, page_size=8, num_pages=2),
+                        paged=True, page_size=8, num_pages=3,
+                        preempt_policy="never"),
             params,
         )
-        sched.submit(prompt_a, request_id="a", max_new=4)
-        sched.step()  # "a" owns page 0 (prompt) — 1 page left
+        sched.submit(prompt_a, request_id="a", max_new=12)
+        sched.step()  # "a" owns page 0 (prompt) — 2 pages left
         sched.submit(prompt_b, request_id="b", max_new=4)
         with pytest.raises(RuntimeError, match="exhausted"):
             _run(sched, 2)
-        # the neighbor's pages were never touched: cancel "b" and drain "a"
-        slot_b = next(s for s, t in enumerate(sched._prefilling) if t)
-        sched._prefills.clear()
-        sched._prefilling[slot_b] = None
-        sched._release_slot_pages(slot_b)
+        # "a" failed mid-decode and was unwound: its page is back in the
+        # free list (the no-leak guarantee) and only "b"'s prefill pages
+        # remain live
+        (req_a,) = sched.failed
+        assert req_a["id"] == "a" and req_a["_status"] == "failed"
+        assert sched._alloc.used == 2
         _run(sched, 1)
-    (req,) = [r for r in sched.completed if r["id"] == "a"]
-    # the aborted tick may have queued one decode past the budget before the
-    # flush could retire "a" — the stream itself must still match reference
-    ref = _reference_generate(cfg, mesh, params, prompt_a, 4)
-    assert req["generated"][: len(ref)] == ref
+    got = {r["id"]: r["generated"] for r in sched.completed}
+    assert got["b"] == _reference_generate(cfg, mesh, params, prompt_b, 4)
+    assert sched._alloc.used == 0, "pages leaked past retirement"
+    # whatever "a" produced before failing is a clean prefix of its
+    # reference stream — the unwind never corrupted its (or b's) pages
+    ref = _reference_generate(cfg, mesh, params, prompt_a, 12)
+    assert req_a["generated"] == ref[: len(req_a["generated"])]
 
 
 def test_paged_rejects_indivisible_max_len():
@@ -613,14 +627,14 @@ def test_paged_rejects_indivisible_max_len():
 
 
 # ---------------------------------------------------------------------------
-# sampling: temperature/top-k with per-slot on-device PRNG keys
+# sampling: temperature/top-k with per-request on-device PRNG keys
 # ---------------------------------------------------------------------------
 
 
 def test_sampling_deterministic_and_reset_on_slot_reuse():
     """With greedy=False the decode/prefill-chunk steps sample on device
-    from ``fold_in(slot_key, position)`` — stateless, so a request's
-    stream depends only on (params, prompt, slot, seed): running it after
+    from ``fold_in(request_key, position)`` — stateless, so a request's
+    stream depends only on (params, prompt, request_id, seed): running it after
     a predecessor retired from the slot must reproduce the fresh-scheduler
     stream exactly."""
     cfg, mesh, params = _serve_fixtures()
@@ -651,7 +665,7 @@ def test_sampling_independent_of_coresident_traffic():
     """A sampled request's stream must not depend on what the OTHER slots
     are doing: attaching it late (after another request decoded for a few
     ticks) or toggling overlap must reproduce the solo stream bit for bit.
-    The stateless fold_in(slot_key, position) keying guarantees it — a
+    The stateless fold_in(request_key, position) keying guarantees it — a
     carried-and-split key would advance with every batched decode and
     fail this."""
     cfg, mesh, params = _serve_fixtures()
@@ -867,10 +881,11 @@ def test_prefix_cache_requires_paged_layout():
 
 
 def test_prefix_sharing_sampled_streams_identical():
-    """Sampling composes with sharing: per-slot streams are keyed on
-    fold_in(slot_key, position) — a function of WHERE the request decodes,
-    not of how the KV for earlier positions got there — so sampled tokens
-    are bitwise identical with sharing on or off."""
+    """Sampling composes with sharing: streams are keyed on
+    fold_in(request_key, position) — a function of the request and the
+    position it samples, not of how the KV for earlier positions got
+    there — so sampled tokens are bitwise identical with sharing on or
+    off."""
     cfg, mesh, params = _serve_fixtures()
     rng = np.random.default_rng(31)
     system = rng.integers(4, cfg.vocab, size=16).tolist()
@@ -928,3 +943,242 @@ def test_batch_scheduler_batches_token_readback(monkeypatch):
     assert calls["n"] <= 5, f"{calls['n']} readbacks in {steps} steps"
     for req in sched.completed:
         assert len(req["generated"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# admission queue, preemption under memory pressure, recompute-resume
+# ---------------------------------------------------------------------------
+# The guarantee under test: preemption is a pure scheduling decision — a
+# preempted request's resumed stream is bitwise identical to an ample-pool
+# run (recompute rebuilds the prompt KV on the same chunk grid and replays
+# the generated history through ordinary decode steps), and neighbors never
+# see a difference.
+
+
+def _run_under_pressure(cfg, mesh, params, prompts, *, num_pages,
+                        max_new=8, greedy=True, page_size=8,
+                        prefill_chunk=4, batch=2, policy="priority"):
+    kw = {} if greedy else dict(greedy=False, temperature=0.8, top_k=20,
+                                sample_seed=3)
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=batch, prefill_chunk=prefill_chunk,
+                        paged=True, page_size=page_size, num_pages=num_pages,
+                        preempt_policy=policy, **kw),
+            params,
+        )
+        for rid, p in enumerate(prompts):
+            sched.submit(p, request_id=rid, max_new=max_new)
+        sched.drain()
+    return sched
+
+
+@pytest.mark.parametrize("greedy", [True, False])
+def test_preempt_resume_identity(greedy):
+    """Forced preemption: a 3-page pool cannot hold two 2-page requests, so
+    the younger parks itself mid-decode and resumes after the older
+    retires — and every token stream is bitwise identical to an ample-pool
+    run, greedy AND sampled (per-request sampling keys make the stream
+    independent of the slot it resumes into)."""
+    cfg, mesh, params = _serve_fixtures()
+    prompts = [list(range(4, 12)), list(range(20, 28))]  # 1 page each, grow to 2
+
+    ample = _run_under_pressure(cfg, mesh, params, prompts, num_pages=16,
+                                greedy=greedy)
+    tight = _run_under_pressure(cfg, mesh, params, prompts, num_pages=3,
+                                greedy=greedy)
+    assert tight.stats["preemptions"] > 0, "pressure never materialized"
+    assert tight.stats["resumes"] > 0
+    assert _tokens(tight) == _tokens(ample)
+    assert tight._alloc.used == 0, "pages leaked across preempt/resume"
+    press = tight.kv_cache_stats()["pressure"]
+    assert press["preemptions"] == tight.stats["preemptions"]
+    assert press["pages_freed_by_preempt"] > 0
+
+
+@pytest.mark.parametrize("arch", ["zamba2-2.7b", "xlstm-350m"])
+def test_preempt_resume_identity_recurrent(arch):
+    """Recompute-resume on recurrent/hybrid stacks: state has no positional
+    masking, so resume must re-run it over EVERY token — the full prompt
+    through the chunked prefill (the PR 6 done=0 rule) and the generated
+    history through replayed decode steps. Tokens must match the
+    ample-pool run exactly."""
+    cfg = smoke_config(arch).replace(
+        compute_dtype_name="float32", param_dtype_name="float32",
+        **({"repeats": 1} if arch == "xlstm-350m" else {}),
+    )
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    prompts = [list(range(4, 12)), list(range(20, 28))]
+
+    ample = _run_under_pressure(cfg, mesh, params, prompts, num_pages=16,
+                                max_new=6)
+    tight = _run_under_pressure(cfg, mesh, params, prompts, num_pages=3,
+                                max_new=6)
+    assert tight.stats["preemptions"] > 0, "pressure never materialized"
+    assert _tokens(tight) == _tokens(ample)
+    for rid, p in enumerate(prompts):
+        ref = _reference_generate(cfg, mesh, params, p, 6)
+        assert _tokens(tight)[rid] == ref, (rid, _tokens(tight)[rid], ref)
+
+
+def test_victim_selection_policies():
+    """_pick_victim unit semantics: only strictly-younger (or strictly
+    lower-priority) occupants are eligible — the oldest request can never
+    be evicted by a newcomer — and each policy orders the eligible set as
+    documented."""
+    cfg, mesh, params = _serve_fixtures()
+
+    def scheduler(policy):
+        with mesh:
+            s = BatchScheduler(
+                cfg, mesh,
+                ServeConfig(max_len=64, batch=4, paged=True, page_size=8,
+                            num_pages=32, preempt_policy=policy),
+                params,
+            )
+        # hand-place occupants; submit() assigns _seq in call order
+        prios = {"w": 0, "x": 0, "y": 0, "z": 1}
+        for rid in ("w", "x", "y", "z"):
+            s.submit([1, 2, 3], request_id=rid, max_new=4,
+                     priority=prios[rid])
+        reqs = {r["id"]: r for r in s.queue}
+        s.queue.clear()
+        for slot, rid in enumerate(("w", "x", "y", "z")):
+            s.active[slot] = reqs[rid]
+        s._slot_pages[0] = [0]              # w: oldest
+        s._slot_pages[1] = [1, 2, 3]        # x: most pages
+        s._slot_pages[2] = [4, 5]           # y
+        s._slot_pages[3] = [6, 7]           # z: higher priority class
+        reqs["x"]["generated"] = [9]        # x: some progress
+        reqs["y"]["generated"] = []         # y: least progress
+        return s, reqs
+
+    s, reqs = scheduler("priority")
+    # requester w (oldest, prio 0): z is NOT eligible (higher priority);
+    # among x/y the cheapest class ties and most-pages wins -> x (slot 1)
+    assert s._pick_victim(reqs["w"]) == 1
+    s, reqs = scheduler("pages")
+    assert s._pick_victim(reqs["w"]) == 1   # most pages outright
+    s, reqs = scheduler("progress")
+    assert s._pick_victim(reqs["w"]) == 2   # y lost the least work
+    # anti-livelock: the NEWEST same-priority request sees no eligible
+    # victim at all (everyone is older) — it must park itself instead
+    s, reqs = scheduler("priority")
+    assert s._pick_victim(reqs["y"]) is None
+    # ...but a high-priority newcomer may evict older lower-priority work
+    assert s._pick_victim(reqs["z"]) == 1
+
+
+def test_mid_stream_cancel_frees_pages_neighbors_unaffected():
+    """cancel() mid-decode frees the victim's pages immediately, leaves
+    the prefix trie's own pins resident, and does not perturb the
+    co-resident request's stream by a single bit."""
+    cfg, mesh, params = _serve_fixtures()
+    prompt_a, prompt_b = list(range(4, 14)), list(range(30, 38))
+
+    def run(with_cancel):
+        with mesh:
+            sched = BatchScheduler(
+                cfg, mesh,
+                ServeConfig(max_len=64, batch=2, prefill_chunk=4,
+                            paged=True, page_size=8, prefix_cache=True),
+                params,
+            )
+            sched.submit(prompt_a, request_id="a", max_new=10)
+            handle_b = sched.submit(prompt_b, request_id="b", max_new=10)
+            for _ in range(7):  # both prefilled; b decoding mid-stream
+                sched.step()
+            if with_cancel:
+                used_before = sched._alloc.used
+                trie_before = sched._prefix.size
+                assert handle_b.cancel()
+                assert not handle_b.cancel()  # idempotent: already closed
+                assert handle_b.status == "cancelled" and handle_b.done
+                assert sched._alloc.used < used_before  # pages freed NOW
+                assert sched._prefix.size == trie_before  # pins unharmed
+            sched.drain()
+        return sched
+
+    full = run(False)
+    cut = run(True)
+    a_full = {r["id"]: r["generated"] for r in full.completed}["a"]
+    a_cut = {r["id"]: r["generated"] for r in cut.completed}["a"]
+    assert a_cut == a_full, "cancel perturbed the co-resident stream"
+    assert [r["id"] for r in cut.cancelled] == ["b"]
+    assert all(r["id"] != "b" for r in cut.completed)
+    assert cut.stats["cancellations"] == 1
+    # nothing leaked: only the trie's pins remain after drain
+    assert cut._alloc.used == cut._prefix.size
+    # cancelling a request still waiting in the admission queue works too
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=1, prefill_chunk=4), params,
+        )
+        sched.submit(prompt_a, request_id="a", max_new=4)
+        hq = sched.submit(prompt_b, request_id="q", max_new=4)  # queued
+        sched.step()
+        assert hq.cancel() and not sched.queue
+        sched.drain()
+    assert {r["id"] for r in sched.completed} == {"a"}
+
+
+def test_priority_preempts_lower_and_both_match_reference():
+    """A strictly-higher-priority arrival behind a full batch evicts the
+    lowest-priority occupant; the evicted request resumes afterwards and
+    BOTH streams match the stop-the-world reference exactly."""
+    cfg, mesh, params = _serve_fixtures()
+    prompt_lo, prompt_hi = list(range(4, 12)), list(range(20, 26))
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=1, prefill_chunk=4,
+                        paged=True, page_size=8),
+            params,
+        )
+        h_lo = sched.submit(prompt_lo, request_id="lo", max_new=8, priority=0)
+        for _ in range(4):
+            sched.step()  # lo prefilled and decoding
+        h_hi = sched.submit(prompt_hi, request_id="hi", max_new=6, priority=5)
+        assert h_hi.result() == _reference_generate(
+            cfg, mesh, params, prompt_hi, 6
+        )
+        sched.drain()
+    assert sched.stats["preemptions"] >= 1
+    assert sched.stats["resumes"] >= 1
+    assert sched.kv_cache_stats()["pressure"]["peak_queue_depth"] >= 1
+    assert h_lo.status == "done"
+    assert h_lo.tokens == _reference_generate(cfg, mesh, params, prompt_lo, 8)
+    # "hi" finished before "lo" despite arriving later: priority worked
+    order = [r["id"] for r in sched.completed]
+    assert order.index("hi") < order.index("lo")
+
+
+def test_stream_async_interleaves_two_requests():
+    """stream_async: two concurrent consumers over one scheduler, each
+    driving shared ticks — both streams complete and match the greedy
+    reference."""
+    import asyncio
+
+    cfg, mesh, params = _serve_fixtures()
+    prompts = {"a": list(range(4, 12)), "b": list(range(20, 27))}
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=2, prefill_chunk=4), params,
+        )
+        for rid, p in prompts.items():
+            sched.submit(p, request_id=rid, max_new=5)
+
+        async def collect(rid):
+            return [t async for t in sched.stream_async(rid)]
+
+        async def main():
+            return await asyncio.gather(collect("a"), collect("b"))
+
+        got_a, got_b = asyncio.run(main())
+        sched.drain()
+    assert got_a == _reference_generate(cfg, mesh, params, prompts["a"], 5)
+    assert got_b == _reference_generate(cfg, mesh, params, prompts["b"], 5)
