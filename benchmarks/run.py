@@ -25,6 +25,12 @@ are bitwise identical — greedy AND sampled — with ``preemptions > 0`` and
 zero allocator pages leaked after drain, plus a goodput sanity pass of
 the open-loop traffic harness under Poisson and bursty arrivals (every
 request completed or cancelled, none failed, TTFT percentiles ordered).
+Finally the chaos gate: under a seeded fault schedule injecting every
+fault kind at least once (NaN logits, KV-page corruption, allocator
+spike, hung dispatch), every recovered request's tokens must be bitwise
+identical to the fault-free run — greedy AND sampled — a retry-exhausted
+request must be quarantined (terminal ``failed``, pages freed,
+co-residents untouched), and zero pages may leak after drain.
 """
 
 from __future__ import annotations

@@ -43,16 +43,29 @@ a preemption (tiny pool vs ample pool) and asserts the recompute-resume
 token streams are bitwise identical, greedy AND sampled, with zero pages
 leaked after drain.
 
+A sixth section (``--chaos`` / ``run_chaos``) is the fault-injection
+soak: the same seeded burst workload replayed fault-free and under a
+seeded ``repro.serve.faults`` schedule (NaN logits, page corruption,
+allocator spikes, dispatch hangs), reporting the recovery counters,
+goodput retention and completed-token identity between the two runs;
+``--check`` gates fault-recovery token identity (greedy AND sampled,
+every fault kind injected at least once), quarantine-works (a request
+whose faults exhaust ``max_retries`` ends terminal ``failed`` while its
+neighbors stay bitwise intact) and zero pages leaked after drain.
+
     PYTHONPATH=src:. python benchmarks/serve_throughput.py [arch ...]
     PYTHONPATH=src:. python benchmarks/serve_throughput.py --traffic [arch ...]
+    PYTHONPATH=src:. python benchmarks/serve_throughput.py --chaos [arch ...]
 
 With archs given (the nightly sweep), the first writes BENCH_serve.json
 and each additional arch writes BENCH_serve_<arch>.json; ``--traffic``
-writes ``BENCH_serve_traffic_<arch>.json`` per arch.
+writes ``BENCH_serve_traffic_<arch>.json`` per arch and ``--chaos``
+writes ``BENCH_serve_chaos_<arch>.json`` per arch.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import sys
@@ -341,6 +354,175 @@ def _check_preemption(cfg, mesh, params) -> None:
             )
 
 
+def _leaked_pages(sched) -> int:
+    """Pages still allocated after drain beyond the prefix trie's own pins
+    (with ``prefix_cache`` on, trie-pinned pages legitimately survive their
+    inserting request — anything else is a leak)."""
+    kv = sched.kv_cache_stats()
+    pinned = kv.get("prefix_cache", {}).get("trie_pages", 0)
+    return sched._alloc.used - pinned
+
+
+def run_chaos(cfg, mesh, params, *, arrival: str = "burst",
+              n_requests: int = 12, seed: int = 0,
+              fault_seed: int = 0) -> dict:
+    """Goodput-under-faults: the seeded burst workload replayed twice on
+    the same scheduler config — fault-free baseline, then under the
+    seeded chaos schedule — reporting the recovery counters, the goodput
+    retention ratio, and completed-request token identity between the
+    two runs (the recovery-correctness signal the nightly soak records).
+    No scheduled cancellations: every request must complete in both runs
+    so the identity comparison covers the full workload."""
+    from repro import compat
+    from repro.serve.faults import FaultConfig, FaultInjector
+    from repro.serve.serve import BatchScheduler, ServeConfig
+    from repro.serve.traffic import TrafficConfig, generate_workload, replay
+
+    tcfg = TrafficConfig(
+        n_requests=n_requests, seed=seed, arrival=arrival, rate=0.8,
+        prompt_short=(4, 10), prompt_long=(12, 20), max_new_short=(3, 6),
+        max_new_long=(8, 12), cancel_frac=0.0, vocab_hi=cfg.vocab,
+    )
+    workload = generate_workload(tcfg)
+    fcfg = FaultConfig(seed=fault_seed, horizon_ticks=24, n_nan=2,
+                       n_page_corrupt=1, n_alloc_spike=1, n_hang=1,
+                       hang_s=0.2)
+
+    def one(injector):
+        with compat.use_mesh(mesh):
+            sched = BatchScheduler(
+                cfg, mesh,
+                ServeConfig(max_len=64, batch=2, prefill_chunk=4,
+                            paged=True, page_size=8, num_pages=10,
+                            prefix_cache=True, watchdog_deadline_s=0.05),
+                params,
+            )
+            metrics = replay(sched, workload, faults=injector)
+        return metrics, sched
+
+    base_m, base_s = one(None)
+    injector = FaultInjector(fcfg)
+    chaos_m, chaos_s = one(injector)
+    gen_b, gen_c = base_m.pop("generated"), chaos_m.pop("generated")
+    common = set(gen_b) & set(gen_c)
+    return {
+        "arrival": arrival,
+        "fault_config": dataclasses.asdict(fcfg),
+        "identical_completed_tokens": (
+            set(gen_b) == set(gen_c)
+            and all(gen_b[k] == gen_c[k] for k in common)
+        ),
+        "completed_both": len(common),
+        "injected": dict(injector.counters),
+        "goodput_retention": round(
+            chaos_m["goodput_tokens_per_sec"]
+            / max(base_m["goodput_tokens_per_sec"], 1e-9), 3
+        ),
+        "zero_leak": _leaked_pages(base_s) == 0 and _leaked_pages(chaos_s) == 0,
+        "baseline": base_m,
+        "chaos": chaos_m,
+    }
+
+
+def _chaos_batch(cfg, mesh, params, *, greedy: bool, fault_cfg=None,
+                 fault_events=None, max_new: int = 8):
+    """One drained scheduler pass over a fixed 6-request trace, with an
+    optional fault schedule; the ``_check_chaos`` building block (small
+    direct submits — faster and more controllable than the traffic
+    composition, which ``run_chaos`` covers)."""
+    from repro import compat
+    from repro.serve.faults import FaultInjector
+    from repro.serve.serve import BatchScheduler, ServeConfig
+
+    kw = {} if greedy else dict(greedy=False, temperature=0.8, top_k=20,
+                                sample_seed=3)
+    injector = None
+    if fault_cfg is not None or fault_events is not None:
+        injector = FaultInjector(fault_cfg, events=fault_events)
+    prompts = _request_trace(cfg, 6, seed=5)
+    with compat.use_mesh(mesh):
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=4, prefill_chunk=4, paged=True,
+                        page_size=8, num_pages=24, prefix_cache=True,
+                        watchdog_deadline_s=0.05, **kw),
+            params, fault_injector=injector,
+        )
+        for rid, p in enumerate(prompts):
+            sched.submit(p, request_id=rid, max_new=max_new)
+        sched.drain()
+    return sched, injector
+
+
+def _check_chaos(cfg, mesh, params) -> None:
+    """The fault-recovery identity gate (tiny shape): under a seeded
+    schedule injecting every fault kind at least once, each request's
+    tokens must be bitwise identical to the fault-free run — greedy AND
+    sampled — with zero pages leaked; then a targeted schedule that
+    exhausts one request's retries must quarantine exactly that request
+    (terminal ``failed``, pages freed) while its co-residents stay
+    bitwise intact."""
+    from repro.serve.faults import FaultConfig, FaultEvent
+
+    fcfg = FaultConfig(seed=3, horizon_ticks=20, n_nan=2, n_page_corrupt=1,
+                       n_alloc_spike=1, n_hang=1, hang_s=0.2)
+    toks = lambda s: {r["id"]: r["generated"] for r in s.completed}
+    for greedy in (True, False):
+        mode = "greedy" if greedy else "sampled"
+        base, _ = _chaos_batch(cfg, mesh, params, greedy=greedy)
+        chaos, inj = _chaos_batch(cfg, mesh, params, greedy=greedy,
+                                  fault_cfg=fcfg)
+        for kind in ("nan_injected", "pages_corrupted", "alloc_spikes",
+                     "hangs"):
+            if inj.counters[kind] < 1:
+                raise AssertionError(
+                    f"chaos schedule injected no {kind} ({mode}): "
+                    f"{inj.counters}"
+                )
+        rec = chaos.kv_cache_stats()["recovery"]
+        if rec["retries"] < 1 or rec["watchdog_trips"] < 1:
+            raise AssertionError(
+                f"chaos run recovered nothing ({mode}): {rec}"
+            )
+        if toks(chaos) != toks(base):
+            raise AssertionError(
+                f"fault recovery changed tokens vs fault-free run "
+                f"({mode}): {toks(chaos)} vs {toks(base)}"
+            )
+        if _leaked_pages(chaos) != 0:
+            raise AssertionError(
+                f"chaos run leaked {_leaked_pages(chaos)} pages ({mode})"
+            )
+    # quarantine: more NaN faults pinned to request 0 than max_retries
+    # allows -> terminal failed, pages freed, neighbors bitwise intact
+    base, _ = _chaos_batch(cfg, mesh, params, greedy=True)
+    n_faults = base.scfg.max_retries + 1
+    events = [FaultEvent(kind="nan", tick=4 + 3 * i, request_id=0)
+              for i in range(n_faults)]
+    quar, _ = _chaos_batch(cfg, mesh, params, greedy=True,
+                           fault_events=events)
+    victims = [r for r in quar.failed if r["id"] == 0]
+    if not victims or victims[0]["_status"] != "failed":
+        raise AssertionError(
+            f"request 0 was not quarantined: failed={quar.failed} "
+            f"stats={quar.kv_cache_stats()['recovery']}"
+        )
+    if quar.stats["quarantined"] != 1:
+        raise AssertionError(
+            f"expected exactly 1 quarantine: {quar.stats['quarantined']}"
+        )
+    expect = {k: v for k, v in toks(base).items() if k != 0}
+    if toks(quar) != expect:
+        raise AssertionError(
+            f"quarantine disturbed co-resident streams: {toks(quar)} "
+            f"vs {expect}"
+        )
+    if _leaked_pages(quar) != 0:
+        raise AssertionError(
+            f"quarantine leaked {_leaked_pages(quar)} pages"
+        )
+
+
 def _workload_pages(prompts, max_new: int, batch: int, page_size: int) -> int:
     """Pool size for the trace: every concurrently-resident request (at most
     ``batch``) fully extended — the honest paged footprint, well below the
@@ -494,6 +676,9 @@ def check(out_path: str | None = None) -> str:
         )
     # forced-preemption identity (greedy AND sampled) + no-leak gate
     _check_preemption(cfg, mesh, params)
+    # fault-recovery identity (greedy AND sampled), every fault kind
+    # injected, quarantine-works + no-leak gate
+    _check_chaos(cfg, mesh, params)
     # goodput sanity under both arrival processes: the tight pool must
     # degrade gracefully (preempt/queue), never drop or fail a request
     for arrival, m in result["traffic"].items():
@@ -613,6 +798,37 @@ def main_traffic(archs: list[str] | None = None) -> list[str]:
     return lines
 
 
+def main_chaos(archs: list[str] | None = None) -> list[str]:
+    """The nightly chaos soak: per arch, the seeded burst workload under
+    the seeded fault schedule vs fault-free, written to
+    ``BENCH_serve_chaos_<arch>.json`` next to the serve artifacts (the
+    Pages assembly globs ``BENCH_serve*.json``, so the robustness
+    trajectory rides the existing pipeline)."""
+    archs = archs or ["tinyllama-1.1b"]
+    lines: list[str] = []
+    for arch in archs:
+        cfg, mesh, params = _build(arch)
+        result = {"arch": arch,
+                  "chaos": run_chaos(cfg, mesh, params, arrival="burst")}
+        path = _save(result, os.path.join(
+            os.path.dirname(RESULTS_DIR) or "results",
+            f"BENCH_serve_chaos_{arch}.json",
+        ))
+        ch = result["chaos"]
+        rec = ch["chaos"].get("recovery", {})
+        lines.append(csv_line(
+            f"serve_chaos_{ch['arrival']}[{arch}]",
+            ch["chaos"]["wall_s"] * 1e6 / max(ch["chaos"]["ticks"], 1),
+            f"goodput_retention={ch['goodput_retention']};"
+            f"identical={ch['identical_completed_tokens']};"
+            f"retries={rec.get('retries', 0)};"
+            f"quarantined={rec.get('quarantined', 0)};"
+            f"watchdog={rec.get('watchdog_trips', 0)};"
+            f"zero_leak={ch['zero_leak']};json={path}",
+        ))
+    return lines
+
+
 def main(archs: list[str] | None = None) -> list[str]:
     archs = archs or ["tinyllama-1.1b"]
     lines: list[str] = []
@@ -632,6 +848,9 @@ if __name__ == "__main__":
     print("name,us_per_call,derived")
     if argv and argv[0] == "--traffic":
         for line in main_traffic(argv[1:] or None):
+            print(line)
+    elif argv and argv[0] == "--chaos":
+        for line in main_chaos(argv[1:] or None):
             print(line)
     else:
         for line in main(argv or None):

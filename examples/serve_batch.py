@@ -16,6 +16,12 @@ record suitable for the same CI report as training runs.
         # recompute-resume (bitwise identically), some clients hang up
         # mid-stream — the demo prints goodput, TTFT percentiles and the
         # scheduler's pressure counters
+    PYTHONPATH=src python examples/serve_batch.py --chaos
+        # the traffic run under a seeded fault schedule: NaN logits, a
+        # corrupted KV page, an allocator spike and a hung dispatch land
+        # mid-run; victims retry through recompute-resume (their streams
+        # stay bitwise identical), the watchdog trips on the hang, and
+        # the demo prints the recovery counters next to goodput
 
 The paged layout (``ServeConfig.paged``, the ``--paged`` default here and
 in ``repro.launch.serve``) keeps attention KV in a shared pool of
@@ -56,10 +62,12 @@ def main():
     paged = "--dense" not in sys.argv[1:]
     shared_prefix = "--shared-prefix" in sys.argv[1:]
     traffic = "--traffic" in sys.argv[1:]
-    if (shared_prefix or traffic) and not paged:
-        raise SystemExit("--shared-prefix/--traffic need the paged layout")
-    if traffic:
-        return main_traffic()
+    chaos = "--chaos" in sys.argv[1:]
+    if (shared_prefix or traffic or chaos) and not paged:
+        raise SystemExit("--shared-prefix/--traffic/--chaos need the paged "
+                         "layout")
+    if traffic or chaos:
+        return main_traffic(chaos=chaos)
     cfg = smoke_config("tinyllama-1.1b")
     mesh = make_host_mesh()
     params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
@@ -127,11 +135,12 @@ def main():
     print(f"run record: {session.last_record_path}")
 
 
-def main_traffic():
+def main_traffic(chaos: bool = False):
     """Open-loop bursty load against a pool sized well under the demand
     peak: admission queueing, preemption + recompute-resume, and
     mid-stream cancellations, measured the way BENCH_serve.json reports
-    them."""
+    them. With ``chaos`` a seeded fault schedule rides the same run and
+    the scheduler must recover through retry/quarantine."""
     from repro.serve.traffic import TrafficConfig, generate_workload, replay
 
     cfg = smoke_config("tinyllama-1.1b")
@@ -146,17 +155,26 @@ def main_traffic():
     workload = generate_workload(TrafficConfig(
         n_requests=12, seed=0, arrival="burst", rate=0.8, burst_mult=5.0,
         prompt_short=(4, 10), prompt_long=(12, 20), max_new_short=(4, 8),
-        max_new_long=(8, 12), cancel_frac=0.2, vocab_hi=cfg.vocab,
+        max_new_long=(8, 12), cancel_frac=0.0 if chaos else 0.2,
+        vocab_hi=cfg.vocab,
     ))
+    injector = None
+    if chaos:
+        from repro.serve.faults import FaultConfig, FaultInjector
+
+        injector = FaultInjector(FaultConfig(seed=3, horizon_ticks=24,
+                                             hang_s=0.2))
     with compat.use_mesh(mesh), session:
         sched = BatchScheduler(
             cfg, mesh,
             # 2 slots x 3 pages: bursts must queue, long requests must
             # preempt — graceful degradation instead of a RuntimeError
             ServeConfig(max_len=64, batch=2, prefill_chunk=8, paged=True,
-                        page_size=8, num_pages=6), params, session=session,
+                        page_size=8, num_pages=6,
+                        watchdog_deadline_s=0.05 if chaos else None),
+            params, session=session,
         )
-        m = replay(sched, workload)
+        m = replay(sched, workload, faults=injector)
     session.finalize("results/serve_traffic")
     print(f"bursty traffic: {m['completed']} completed, "
           f"{m['cancelled']} cancelled, {m['failed']} failed "
@@ -169,6 +187,12 @@ def main_traffic():
           f"resumes, {m['cancellations']} cancellations "
           f"({m['kv']['pressure']['pages_freed_by_preempt']} pages freed "
           f"by preempt)")
+    if chaos:
+        rec = m["recovery"]
+        print(f"chaos: injected {rec['injected']}; recovered with "
+              f"{rec['retries']} retries ({rec['backoff_total_ticks']} "
+              f"backoff ticks), {rec['watchdog_trips']} watchdog trips, "
+              f"{rec['quarantined']} quarantined, {rec['shed']} shed")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,15 @@ bitwise identically):
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --arrival burst --rate 0.8 --requests 16 \
         --num-pages 8 --page-size 8 --cancel-frac 0.2
+
+``--chaos`` attaches the seeded fault injector (``--fault-seed``): NaN
+logits, KV-page corruption, allocator spikes and hung dispatches land
+mid-run and the scheduler retries/quarantines through them, reporting
+the recovery counters next to the pressure stats:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --arrival burst --requests 12 --chaos --fault-seed 3 \
+        --watchdog-deadline 0.1 --checksum-pages
 """
 
 from __future__ import annotations
@@ -71,6 +80,23 @@ def main(argv=None) -> int:
                     help="victim selection when the page pool exhausts: "
                          "lowest-priority-first (default), most-pages, "
                          "least-progress, or never (exhaustion raises)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="attach the seeded fault injector (NaN logits, "
+                         "KV-page corruption, allocator spikes, hung "
+                         "dispatches) — the scheduler must recover")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultConfig seed: same seed, same fault schedule")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="fault retries per request before quarantine")
+    ap.add_argument("--watchdog-deadline", type=float, default=None,
+                    help="per-dispatch watchdog deadline in seconds "
+                         "(default: off; --chaos defaults it to 0.5)")
+    ap.add_argument("--checksum-pages", action="store_true",
+                    help="per-page fingerprints validated at prefix-cache "
+                         "sharing (catches silent bit flips)")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="admission queue depth beyond which new lowest-"
+                         "priority requests are shed (default: never)")
     ap.add_argument("--sample", action="store_true",
                     help="temperature/top-k sampling instead of greedy argmax")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -103,6 +129,14 @@ def main(argv=None) -> int:
         ResourceConfig(num_hosts=1, devices_per_host=len(jax.devices())),
     )
     rng = np.random.default_rng(0)
+    injector = None
+    watchdog = args.watchdog_deadline
+    if args.chaos:
+        from repro.serve.faults import FaultConfig, FaultInjector
+
+        injector = FaultInjector(FaultConfig(seed=args.fault_seed))
+        if watchdog is None:
+            watchdog = 0.5
     with compat.use_mesh(mesh), session:
         sched = BatchScheduler(
             cfg, mesh,
@@ -116,8 +150,12 @@ def main(argv=None) -> int:
                         greedy=not args.sample,
                         temperature=args.temperature, top_k=args.top_k,
                         sample_seed=args.sample_seed,
-                        preempt_policy=args.preempt_policy),
-            params, session=session,
+                        preempt_policy=args.preempt_policy,
+                        max_retries=args.max_retries,
+                        watchdog_deadline_s=watchdog,
+                        checksum_pages=args.checksum_pages,
+                        shed_queue_depth=args.shed_queue_depth),
+            params, session=session, fault_injector=injector,
         )
         if args.arrival:
             # open-loop traffic: arrivals, lengths, priorities and cancels
@@ -186,6 +224,13 @@ def main(argv=None) -> int:
           f"{pr['evictions_for_preempt']} trie evictions for preempt, "
           f"{pr['cancellations']} cancellations, "
           f"peak queue depth {pr['peak_queue_depth']}")
+    rec = kv["recovery"]
+    print(f"[serve] recovery: {rec['retries']} retries "
+          f"({rec['backoff_total_ticks']} backoff ticks), "
+          f"{rec['quarantined']} quarantined, {rec['shed']} shed, "
+          f"{rec['watchdog_trips']} watchdog trips, "
+          f"{rec['checksum_failures']} checksum failures"
+          + (f"; injected {rec['injected']}" if "injected" in rec else ""))
     session.finalize(args.talp_out or None)
     if session.last_record_path:
         print(f"[serve] TALP record: {session.last_record_path}")

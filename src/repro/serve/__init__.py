@@ -14,10 +14,17 @@ from repro.serve.traffic import (
     generate_workload,
     replay,
 )
+from repro.serve.faults import (
+    FaultConfig,
+    FaultEvent,
+    FaultInjector,
+    generate_faults,
+)
 
 __all__ = [
     "ServeConfig", "make_decode_step", "make_prefill_step",
     "make_prefill_chunk_step", "make_serve_decode_step",
     "serve_cache_pspecs", "BatchScheduler", "RequestHandle",
     "TrafficConfig", "TrafficRequest", "generate_workload", "replay",
+    "FaultConfig", "FaultEvent", "FaultInjector", "generate_faults",
 ]

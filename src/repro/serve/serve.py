@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import zlib
 from typing import Any
 
@@ -92,8 +93,49 @@ class ServeConfig:
     #               attach (releasing every page it held — nothing leaks)
     #               and raises
     preempt_policy: str = "priority"
+    # resilience (fault detection + recovery). A request whose dispatch is
+    # detected bad (NaN/Inf logits via the on-device sentinel, a page
+    # checksum mismatch, a watchdog trip) is RETRIED through the existing
+    # park/recompute-resume path with capped exponential backoff
+    # (min(cap, base << (retries-1)) ticks before it may re-attach) — a
+    # retried stream is bitwise identical to an unfaulted run, greedy AND
+    # sampled, because resume replays the clean history. After
+    # ``max_retries`` failed attempts the request is QUARANTINED: terminal
+    # "failed" status on its handle, pages freed, co-residents untouched —
+    # the scheduler never crashes on a misbehaving request.
+    max_retries: int = 3
+    retry_backoff_base: int = 1
+    retry_backoff_cap: int = 8
+    # watchdog: a decode dispatch whose host-side dispatch call exceeds
+    # this many seconds trips the watchdog — the (late) tokens are kept
+    # (identity is preserved) and the targeted request retries so a wedged
+    # dispatch path cannot stall its stream forever. None = off.
+    watchdog_deadline_s: float | None = None
+    # per-page content checksums (paged + prefix_cache only): fingerprint
+    # each prompt page at trie insert and validate before mapping it into
+    # a new request's block table — a silently corrupted shared page
+    # (bitflip, not NaN) is evicted and re-prefilled fresh instead of
+    # poisoning every future reader.
+    checksum_pages: bool = False
+    # load shedding: when the admission queue already holds this many
+    # requests, a new submit sheds the lowest-priority youngest waiter
+    # (possibly the new arrival itself) with a terminal "shed" status —
+    # a clear rejection instead of unbounded queueing under sustained
+    # pressure or fault rate. None = never shed.
+    shed_queue_depth: int | None = None
 
     def __post_init__(self):
+        if self.checksum_pages and not (self.paged and self.prefix_cache):
+            raise ValueError(
+                "checksum_pages=True requires paged=True and "
+                "prefix_cache=True: checksums guard pages shared across "
+                "requests through the prefix trie"
+            )
+        if self.max_retries < 0 or self.retry_backoff_base < 1 \
+                or self.retry_backoff_cap < 1:
+            raise ValueError(
+                "max_retries must be >= 0 and retry backoff base/cap >= 1"
+            )
         if self.prefix_cache and not self.paged:
             raise ValueError(
                 "prefix_cache=True requires paged=True: prefix sharing maps "
@@ -232,35 +274,54 @@ def make_serve_decode_step(cfg, mesh, *, paged=False, greedy=True,
     concurrently dispatched prefill chunks) neither write the KV cache nor
     advance recurrent state; their sampled tokens are garbage and ignored.
     ``paged=True`` adds a ``block_tables`` argument routing attention-cache
-    writes and reads through the shared page pool."""
+    writes and reads through the shared page pool.
+
+    The trailing ``fault_mask`` (B,) bool argument poisons the masked
+    slots' logits with NaN *before* the finiteness sentinel — the chaos
+    harness's logit-fault injection point. An all-False mask is a bitwise
+    no-op (``jnp.where`` selects, never propagates), so the fault-free
+    path pays one fused select. The second return value is the on-device
+    NaN/Inf sentinel: ``bad[i]`` is True when slot ``i``'s logits contain
+    a non-finite value — it rides the deferred token readback for free
+    (one extra (B,) bool per flush), and the scheduler retries flagged
+    requests instead of streaming garbage."""
     lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
     sample = functools.partial(
         _sample_tokens, greedy=greedy, temperature=temperature, top_k=top_k,
         vocab=cfg.vocab,
     )
 
+    def _poison_and_sample(logits, fault_mask, rng_keys, pos):
+        logits = jnp.where(fault_mask[:, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
+        bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+        pos_v = jnp.broadcast_to(jnp.asarray(pos).reshape(-1),
+                                 logits.shape[:1])
+        return sample(logits, rng_keys, pos_v), bad
+
     if paged:
         def decode_step(params, tokens, pos, active, caches, block_tables,
-                        rng_keys):
+                        rng_keys, fault_mask):
             """tokens: (B,1); pos: (B,); active: (B,) bool; block_tables:
             (B, n_logical) int32; rng_keys: (B,2) uint32 (static per slot
-            — the sampling key is folded with the position)."""
+            — the sampling key is folded with the position); fault_mask:
+            (B,) bool."""
             logits, new_caches = T.decode_step(
                 params, tokens, pos, cfg, caches, lc, active=active,
                 block_tables=block_tables,
             )
-            pos_v = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), logits.shape[:1])
-            tok = sample(logits, rng_keys, pos_v)
-            return tok[:, None], new_caches
+            tok, bad = _poison_and_sample(logits, fault_mask, rng_keys, pos)
+            return tok[:, None], bad, new_caches
     else:
-        def decode_step(params, tokens, pos, active, caches, rng_keys):
-            """tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool."""
+        def decode_step(params, tokens, pos, active, caches, rng_keys,
+                        fault_mask):
+            """tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool;
+            fault_mask: (B,) bool."""
             logits, new_caches = T.decode_step(
                 params, tokens, pos, cfg, caches, lc, active=active
             )
-            pos_v = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), logits.shape[:1])
-            tok = sample(logits, rng_keys, pos_v)
-            return tok[:, None], new_caches
+            tok, bad = _poison_and_sample(logits, fault_mask, rng_keys, pos)
+            return tok[:, None], bad, new_caches
 
     return decode_step
 
@@ -316,7 +377,10 @@ def make_prefill_chunk_step(cfg, mesh, *, paged=False, greedy=True,
         slot: () int32; caches: full stacked tree; block_tables: the full
         (B, n_logical) table (or None when dense); rng_keys: (B,2) static
         per-slot base keys. Returns (next_tok (1,) sampled at the last
-        valid position, new_caches)."""
+        valid position, bad (1,) — the NaN/Inf finiteness sentinel over
+        the chunk's logits, catching a corrupted shared page read during
+        prefill the same way the decode sentinel catches it — and
+        new_caches)."""
         slot_caches = _slot_slice(caches, slot)
         tbl_row = (
             jax.lax.dynamic_slice_in_dim(block_tables, slot, 1, axis=0)
@@ -328,8 +392,9 @@ def make_prefill_chunk_step(cfg, mesh, *, paged=False, greedy=True,
         )
         key_row = jax.lax.dynamic_slice_in_dim(rng_keys, slot, 1, axis=0)
         next_tok = sample(logits, key_row, start + length - 1)
+        bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
         new_caches = _scatter_back(caches, new_slot, slot)
-        return next_tok, new_caches
+        return next_tok, bad, new_caches
 
     if paged:
         return chunk_step
@@ -467,7 +532,8 @@ class PageAllocator:
 
 
 class _TrieNode:
-    __slots__ = ("tokens", "page", "children", "parent", "last_used")
+    __slots__ = ("tokens", "page", "children", "parent", "last_used",
+                 "checksum")
 
     def __init__(self, tokens, page, parent):
         self.tokens = tokens      # the page_size-token tuple keying this node
@@ -475,6 +541,7 @@ class _TrieNode:
         self.children: dict[tuple, _TrieNode] = {}
         self.parent = parent
         self.last_used = 0
+        self.checksum = None      # uint32 page fingerprint (checksum_pages)
 
 
 class PrefixCache:
@@ -534,12 +601,14 @@ class PrefixCache:
                 donor, donor_rows = child, n
         return chain, donor, donor_rows
 
-    def insert(self, prompt, pages) -> None:
+    def insert(self, prompt, pages, checksums=None) -> None:
         """Record a prefilled prompt's full pages (called when a request's
         prefill completes). Existing nodes are LRU-touched; new nodes pin
         their page with a trie-owned reference. Pages straddling the
         prompt/generated boundary are never inserted — decode will write
-        over their tails."""
+        over their tails. ``checksums`` (one uint fingerprint per full
+        page, when ``ServeConfig.checksum_pages`` is on) are stored on
+        the nodes and validated before any future attach maps them."""
         psize = self.page_size
         node = self.root
         for j in range(len(prompt) // psize):
@@ -556,6 +625,8 @@ class PrefixCache:
                 self.allocator.share([pages[j]])
                 self.size += 1
                 self.stats["inserted_pages"] += 1
+            if checksums is not None:
+                child.checksum = checksums[j]
             self._touch(child)
             node = child
 
@@ -597,6 +668,22 @@ class PrefixCache:
             return False
         self._evict(min(cand, key=lambda n: n.last_used))
         return True
+
+    def evict_subtree(self, node: _TrieNode) -> int:
+        """Evict ``node`` and every descendant (post-order): a checksum
+        mismatch means the page's content can no longer be trusted, and
+        the descendants' pages are unreachable without it. Returns the
+        number of nodes evicted."""
+        count = 0
+        stack, order = [node], []
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            stack.extend(n.children.values())
+        for n in reversed(order):  # children before parents
+            self._evict(n)
+            count += 1
+        return count
 
     def evict_for(self, n_pages: int) -> int:
         """Pool pressure: free >= ``n_pages`` by evicting LRU leaves whose
@@ -654,13 +741,23 @@ def _request_tag(request_id) -> int:
     return zlib.crc32(repr(request_id).encode()) & 0x7FFFFFFF
 
 
+# terminal request statuses: the stream is closed, no more tokens can come
+_TERMINAL = ("done", "cancelled", "failed", "shed")
+
+
 class RequestHandle:
     """Caller-facing view of a submitted request — the async half of the
     admission API. ``submit()`` returns one immediately (arrival time is
     decoupled from slot attach); the handle observes the request's
     lifecycle (``queued -> prefilling -> decoding -> done``, with
-    ``preempted`` parking and ``cancelled``/``failed`` exits), exposes the
-    tokens generated so far, and can cancel mid-stream."""
+    ``preempted``/``retrying`` parking and ``cancelled``/``failed``/
+    ``shed`` exits), exposes the tokens generated so far, and can cancel
+    mid-stream. ``failed`` is the quarantine exit: the request exhausted
+    ``ServeConfig.max_retries`` fault recoveries and was detached with
+    its pages freed — co-residents never see it. ``shed`` is the
+    load-shedding exit: the admission queue was over
+    ``shed_queue_depth`` and this was the lowest-priority youngest
+    waiter."""
 
     __slots__ = ("_sched", "_req")
 
@@ -683,20 +780,23 @@ class RequestHandle:
 
     @property
     def done(self) -> bool:
-        return self._req["_status"] in ("done", "cancelled", "failed")
+        return self._req["_status"] in _TERMINAL
 
     def cancel(self) -> bool:
         return self._sched.cancel(self._req["id"])
 
-    def stream(self):
+    def stream(self, *, timeout: int | None = None):
         """Synchronous token stream (drives the scheduler); see
-        ``BatchScheduler.stream``."""
-        return self._sched.stream(self._req["id"])
+        ``BatchScheduler.stream``. ``timeout`` bounds the scheduler ticks
+        spent waiting for the next token — a stalled scheduler raises
+        ``TimeoutError`` instead of spinning forever."""
+        return self._sched.stream(self._req["id"], timeout=timeout)
 
-    def result(self) -> list[int]:
+    def result(self, *, timeout: int | None = None) -> list[int]:
         """Drive the scheduler until this request finishes; returns its
-        tokens."""
-        for _ in self.stream():
+        tokens. ``timeout`` (scheduler ticks between tokens) raises
+        ``TimeoutError`` on a stall."""
+        for _ in self.stream(timeout=timeout):
             pass
         return self.tokens
 
@@ -793,9 +893,27 @@ class BatchScheduler:
     derived StepProfile — the report shows prefill and decode factor
     regressions separately. With no session (or a null backend) the
     scheduler runs fully uninstrumented at zero cost.
+
+    Resilience: the scheduler is **self-healing** under injected or real
+    faults. Detection is layered — an on-device NaN/Inf sentinel rides
+    every decode/prefill readback (one (B,) bool per flush), optional
+    per-page checksums (``checksum_pages``) validate shared pages at
+    prefix attach, and an optional per-dispatch watchdog
+    (``watchdog_deadline_s``) catches wedged dispatch paths. Recovery is
+    unified: a faulted request RETRIES through the park/recompute-resume
+    path with capped exponential backoff (its stream stays bitwise
+    identical to an unfaulted run), exhausting ``max_retries``
+    QUARANTINES it (terminal "failed", pages freed and scrubbed,
+    co-residents untouched), and ``shed_queue_depth`` sheds the
+    lowest-priority waiter at admission under sustained pressure.
+    Every recovery action is a visit of the session's ``recovery``
+    region and is counted in ``kv_cache_stats()["recovery"]``. A seeded
+    ``repro.serve.faults.FaultInjector`` (``fault_injector=``) drives
+    chaos schedules through these exact paths.
     """
 
-    def __init__(self, cfg, mesh, scfg: ServeConfig, params, session=None):
+    def __init__(self, cfg, mesh, scfg: ServeConfig, params, session=None,
+                 fault_injector=None):
         from repro.session import PerfSession, SessionConfig
 
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
@@ -911,9 +1029,36 @@ class BatchScheduler:
         # keyed by slot so a retired request's still-queued seed can never
         # race the reattached request's seed in the scatter
         self._seeds: dict[int, Any] = {}
-        # pending readbacks: (device tokens (n,1), row->request map); flushed
-        # in a single device_get
-        self._pending: list[tuple[Any, list[dict | None]]] = []
+        # pending readbacks: (device tokens (n,1), device bad-sentinel (n,),
+        # row->request map); flushed in a single device_get
+        self._pending: list[tuple[Any, Any, list[dict | None]]] = []
+        # -- fault injection + recovery state --------------------------
+        # ``faults`` is a repro.serve.faults.FaultInjector (or None); the
+        # scheduler polls it once per tick and applies due events through
+        # the same paths real faults would corrupt
+        self.faults = fault_injector
+        self.shed: list[dict] = []        # load-shed at admission
+        self._fault_nan_slots: set[int] = set()   # poison next decode dispatch
+        # request ids with a poisoned row dispatched but not yet flushed:
+        # ineligible for further nan/hang targeting (a second poison in
+        # that window would be swallowed by the retry already in flight)
+        self._fault_nan_inflight: set = set()
+        self._fault_mask_zero = jnp.zeros((scfg.batch,), bool)
+        # transient allocator spikes: (release_tick, pages) — released in
+        # _apply_faults even after the injector drains, and force-released
+        # by drain() so chaos runs can never leak pool pages
+        self._spike_holds: list[tuple[int, list[int]]] = []
+        self._hang_pending: float = 0.0   # injected dispatch delay (s)
+        self._hang_slot: int | None = None
+        # physical pages the injector corrupted: scrubbed (zeroed on
+        # device) when their holder retries/quarantines, so a recycled
+        # page can never leak NaNs into its next owner's masked tail
+        self._corrupted_pages: set[int] = set()
+        self._page_edit = None            # lazily-built jitted page edits
+        self._fingerprint = None
+        if scfg.checksum_pages:
+            from repro.serve import faults as _F
+            self._fingerprint = _F.page_fingerprint_step()
         self.stats = {
             "ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
             "readbacks": 0,
@@ -931,6 +1076,12 @@ class BatchScheduler:
             "preemptions": 0, "resumes": 0, "cancellations": 0,
             "pages_freed_by_preempt": 0, "evictions_for_preempt": 0,
             "peak_queue_depth": 0,
+            # recovery accounting (kv_cache_stats()["recovery"]): what the
+            # self-healing layer actually did — retries taken, backoff
+            # ticks served, quarantines, load-sheds, checksum mismatches
+            # caught at prefix attach, watchdog trips
+            "retries": 0, "backoff_total_ticks": 0, "quarantined": 0,
+            "shed": 0, "checksum_failures": 0, "watchdog_trips": 0,
         }
 
     def submit(self, prompt_tokens, request_id, max_new: int = 32,
@@ -977,10 +1128,23 @@ class BatchScheduler:
             "generated": [], "_pending": 0, "priority": int(priority),
             "_seq": self._seq, "_tag": _request_tag(request_id),
             "_status": "queued", "_cancelled": False,
+            "_retries": 0, "_not_before": 0,
         }
         self._seq += 1
         self.queue.append(req)
         self._by_id[request_id] = req
+        if (self.scfg.shed_queue_depth is not None
+                and len(self.queue) > self.scfg.shed_queue_depth):
+            # sustained pressure: shed the lowest-priority youngest waiter
+            # (possibly this arrival) with a clear terminal status rather
+            # than queueing without bound — the shed handle reports "shed"
+            # immediately, it never raises
+            victim = min(self.queue, key=lambda r: (r["priority"], -r["_seq"]))
+            self.queue.remove(victim)
+            victim["_status"] = "shed"
+            self.shed.append(victim)
+            self.stats["shed"] += 1
+            self.session.event("recovery")
         self.stats["peak_queue_depth"] = max(
             self.stats["peak_queue_depth"],
             len(self.queue) + len(self._parked),
@@ -996,7 +1160,7 @@ class BatchScheduler:
         dispatched-but-unflushed rows are dropped at the next flush.
         Returns True if the request was still live."""
         req = self._by_id.get(request_id)
-        if req is None or req["_status"] in ("done", "cancelled", "failed"):
+        if req is None or req["_status"] in _TERMINAL:
             return False
         req["_cancelled"] = True
         if req in self.queue:
@@ -1004,19 +1168,9 @@ class BatchScheduler:
         elif req in self._parked:
             self._parked.remove(req)
         else:
-            for slot in range(self.scfg.batch):
-                task = self._prefilling[slot]
-                if self.active[slot] is req or (
-                    task is not None and task["req"] is req
-                ):
-                    if task is not None and task["req"] is req:
-                        self._prefills.remove(task)
-                        self._prefilling[slot] = None
-                    self.active[slot] = None
-                    self._release_slot_pages(slot)
-                    self._seeds.pop(slot, None)
-                    self._replay.pop(slot, None)
-                    break
+            slot = self._slot_of(req)
+            if slot is not None:
+                self._detach(slot)
         req["_status"] = "cancelled"
         self.cancelled.append(req)
         self.stats["cancellations"] += 1
@@ -1027,31 +1181,43 @@ class BatchScheduler:
         can keep relying on the automatic flush boundaries)."""
         self._flush()
 
-    def stream(self, request_id):
+    def stream(self, request_id, *, timeout: int | None = None):
         """Generator of ``request_id``'s tokens, driving the scheduler:
         each iteration steps and flushes until new tokens land. Ends when
-        the request completes (or is cancelled / fails). Co-resident
-        requests advance as a side effect, exactly as in a plain step
-        loop — several interleaved ``stream`` consumers are fine."""
+        the request completes (or is cancelled / fails / is shed).
+        Co-resident requests advance as a side effect, exactly as in a
+        plain step loop — several interleaved ``stream`` consumers are
+        fine. ``timeout`` bounds the scheduler ticks spent waiting
+        BETWEEN tokens: when the request makes no progress for that many
+        ticks (a stalled scheduler, a wedged dispatch with the watchdog
+        off), ``TimeoutError`` is raised instead of spinning forever."""
         req = self._by_id.get(request_id)
         if req is None:
             raise KeyError(f"unknown request {request_id!r}")
+        limit = timeout if timeout is not None else 100_000
         sent, idle = 0, 0
         while True:
             while sent < len(req["generated"]):
                 idle = 0
                 yield req["generated"][sent]
                 sent += 1
-            if req["_status"] in ("done", "cancelled", "failed"):
+            if req["_status"] in _TERMINAL:
                 return
-            self.step()
-            self._flush()
-            idle += 1
-            if idle > 100_000:  # insurance against a scheduling livelock
+            if idle >= limit:
+                if timeout is not None:
+                    raise TimeoutError(
+                        f"request {request_id!r} made no progress in "
+                        f"{idle} scheduler ticks (status "
+                        f"{req['_status']!r})"
+                    )
+                # insurance against a scheduling livelock
                 raise RuntimeError(
                     f"request {request_id!r} stalled in stream() "
                     f"(status {req['_status']!r})"
                 )
+            self.step()
+            self._flush()
+            idle += 1
 
     async def stream_async(self, request_id):
         """Async variant of ``stream``: yields control to the event loop
@@ -1068,7 +1234,7 @@ class BatchScheduler:
             while sent < len(req["generated"]):
                 yield req["generated"][sent]
                 sent += 1
-            if req["_status"] in ("done", "cancelled", "failed"):
+            if req["_status"] in _TERMINAL:
                 return
             self.step()
             self._flush()
@@ -1105,9 +1271,15 @@ class BatchScheduler:
         original seq, so at equal priority it naturally outranks younger
         queued arrivals. Parked candidates must also pass the resume gate
         (enough free or trie-reclaimable pages for prompt + history), so a
-        resume cannot immediately thrash back out."""
+        resume cannot immediately thrash back out — and the retry
+        backoff gate (``_ready``), so a retrying request serves its
+        backoff before it may re-attach."""
         order = lambda r: (-r["priority"], r["_seq"])
-        parked = next((r for r in self._parked if self._resume_fits(r)), None)
+        parked = next(
+            (r for r in self._parked
+             if self._ready(r) and self._resume_fits(r)),
+            None,
+        )
         queued = self.queue[0] if self.queue else None
         if parked is not None and (
             queued is None or order(parked) <= order(queued)
@@ -1117,6 +1289,12 @@ class BatchScheduler:
         if queued is not None:
             return self.queue.pop(0)
         return None
+
+    def _ready(self, req: dict) -> bool:
+        """Retry backoff gate: a retrying request stays parked until its
+        ``_not_before`` tick passes (capped exponential backoff set by
+        ``_fault_retry``)."""
+        return req["_not_before"] <= self.stats["ticks"]
 
     def _resume_fits(self, req) -> bool:
         if self._alloc is None:
@@ -1133,8 +1311,11 @@ class BatchScheduler:
         pressure (the request is put back where it came from, fully
         unwound). A request with generated history is a recompute-resume:
         the prompt re-prefills on the normal chunk grid and the history is
-        scheduled for decode replay."""
-        resume = req["_status"] == "preempted"
+        scheduled for decode replay. A retrying request (fault recovery)
+        rides the identical path: the clean history replays, the faulted
+        suffix recomputes — which is why a retried stream is bitwise
+        identical to an unfaulted run."""
+        resume = req["_status"] in ("preempted", "retrying")
         self.pos[slot] = 0
         if slot in self._dirty:
             reused.append(slot)
@@ -1193,6 +1374,27 @@ class BatchScheduler:
         task = self._prefilling[slot]
         return self.active[slot] or (task["req"] if task else None)
 
+    def _slot_of(self, req: dict) -> int | None:
+        for slot in range(self.scfg.batch):
+            if self._occupant(slot) is req:
+                return slot
+        return None
+
+    def _detach(self, slot: int) -> None:
+        """Pull whatever occupies ``slot`` off the batch: drop its
+        in-flight prefill task, clear the slot, release its pages and its
+        per-slot decode state. The request dict itself is untouched —
+        callers decide where it goes next (parked, cancelled,
+        quarantined)."""
+        task = self._prefilling[slot]
+        if task is not None:
+            self._prefills.remove(task)
+            self._prefilling[slot] = None
+        self.active[slot] = None
+        self._release_slot_pages(slot)
+        self._seeds.pop(slot, None)
+        self._replay.pop(slot, None)
+
     def _preempt_for_priority(self) -> None:
         """A strictly-higher-priority waiter stuck behind a fully-busy
         batch evicts the lowest-priority occupant — one per tick (attach
@@ -1200,7 +1402,7 @@ class BatchScheduler:
         batch incrementally instead of thrashing it in one go."""
         waiters = [r["priority"] for r in self.queue]
         waiters += [r["priority"] for r in self._parked
-                    if self._resume_fits(r)]
+                    if self._ready(r) and self._resume_fits(r)]
         if not waiters or any(
             self._free(s) for s in range(self.scfg.batch)
         ):
@@ -1257,15 +1459,8 @@ class BatchScheduler:
         if req is None:
             return  # the flush retired it — pressure already relieved
         with self.session.region("preempt"):
-            task = self._prefilling[slot]
             freed = len(self._slot_pages[slot]) if self._alloc else 0
-            if task is not None:
-                self._prefills.remove(task)
-                self._prefilling[slot] = None
-            self.active[slot] = None
-            self._release_slot_pages(slot)
-            self._seeds.pop(slot, None)
-            self._replay.pop(slot, None)
+            self._detach(slot)
             req["_status"] = "preempted"
             self._parked.append(req)
             self.stats["preemptions"] += 1
@@ -1280,15 +1475,8 @@ class BatchScheduler:
         if not e.fatal:
             self._preempt(slot)
             return
-        task = self._prefilling[slot]
         req = self._occupant(slot)
-        if task is not None:
-            self._prefills.remove(task)
-            self._prefilling[slot] = None
-        self.active[slot] = None
-        self._release_slot_pages(slot)
-        self._seeds.pop(slot, None)
-        self._replay.pop(slot, None)
+        self._detach(slot)
         if req is not None:
             req["_status"] = "failed"
             self.failed.append(req)
@@ -1317,6 +1505,199 @@ class BatchScheduler:
                 for leaf, fresh in zip(flat, self._fresh_state)
             ]
         self.caches = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- fault recovery (retry / quarantine / injection) -----------------
+
+    def _fault_retry(self, req: dict) -> None:
+        """Send ``req`` through the retry path: flush (its generated
+        history must be complete on the host — resume replays it), detach
+        it from its slot (pages freed, injector-corrupted pages scrubbed
+        on the way out), and park it with a capped-exponential-backoff
+        ready tick. The re-attach rides the same recompute-resume path as
+        preemption — prompt re-prefill on the original chunk grid, decode
+        replay with forced inputs — so the retried stream is bitwise
+        identical to an unfaulted run, greedy and sampled. A request that
+        exhausts ``max_retries`` is quarantined instead."""
+        self._flush()
+        if req["_status"] in _TERMINAL or (
+            req["_status"] == "retrying" and req in self._parked
+        ):
+            return  # already resolved (or already parked for retry)
+        if req["_retries"] >= self.scfg.max_retries:
+            self._quarantine(req)
+            return
+        slot = self._slot_of(req)
+        if slot is not None:
+            self._detach(slot)
+        elif req in self.queue:
+            self.queue.remove(req)
+        elif req in self._parked:
+            self._parked.remove(req)
+        req["_retries"] += 1
+        backoff = min(
+            self.scfg.retry_backoff_cap,
+            self.scfg.retry_backoff_base << (req["_retries"] - 1),
+        )
+        req["_not_before"] = self.stats["ticks"] + backoff
+        req["_status"] = "retrying"
+        self._parked.append(req)
+        self.stats["retries"] += 1
+        self.stats["backoff_total_ticks"] += backoff
+        self.session.event("recovery")
+
+    def _quarantine(self, req: dict) -> None:
+        """Retries exhausted: the request ends in terminal ``failed``
+        status (surfaced on its handle exactly like a fatal pool
+        exhaustion), its pages are freed, and every co-resident stream is
+        untouched — a request the hardware keeps poisoning is a cheap
+        rejection, never a scheduler crash."""
+        slot = self._slot_of(req)
+        if slot is not None:
+            self._detach(slot)
+        elif req in self.queue:
+            self.queue.remove(req)
+        elif req in self._parked:
+            self._parked.remove(req)
+        req["_status"] = "failed"
+        self.failed.append(req)
+        self.stats["quarantined"] += 1
+        self.session.event("recovery")
+
+    def _scrub_slot(self, slot: int) -> None:
+        """Zero (on device) any injector-corrupted page ``slot`` still
+        maps, just before its pages return to the free list. The free
+        list recycles pages verbatim and attention's additive masking
+        propagates NaN even from masked rows — a NaN page handed to the
+        next request would poison it. Scrubbed through the same jitted
+        page-edit step the injector corrupts with."""
+        dirty = [p for p in self._slot_pages[slot]
+                 if p in self._corrupted_pages]
+        if not dirty:
+            return
+        if self._page_edit is None:
+            from repro.serve import faults as _F
+            self._page_edit = _F.page_edit_step("zero")
+        with compat.use_mesh(self.mesh):
+            for p in dirty:
+                self.caches = self._page_edit(
+                    self.caches, jnp.asarray(p, jnp.int32)
+                )
+        self._corrupted_pages.difference_update(dirty)
+
+    def _apply_faults(self) -> None:
+        """Release expired allocator spikes and apply every due injector
+        event (chaos runs only — ``self.faults`` is None otherwise). An
+        event with no applicable target this tick is deferred, so every
+        scheduled fault eventually lands while work is live; targets are
+        chosen by the event's seeded picks, so a rerun of the same
+        schedule hits the same victims."""
+        tick = self.stats["ticks"]
+        if self._spike_holds:
+            expired = [h for h in self._spike_holds if h[0] <= tick]
+            if expired:
+                self._spike_holds = [
+                    h for h in self._spike_holds if h[0] > tick
+                ]
+                for _, pages in expired:
+                    self._alloc.release(pages)
+        if self.faults is None:
+            return
+        for e in self.faults.due(tick):
+            if e.kind == "nan":
+                cand = self._fault_decode_slots(e.request_id)
+                if not cand:
+                    self.faults.defer(e, tick)
+                    continue
+                victim = cand[e.pick % len(cand)]
+                if victim in self._fault_nan_slots:
+                    # already poisoned this tick: two NaNs in one dispatch
+                    # are indistinguishable from one — defer so every
+                    # scheduled injection poisons a distinct dispatch
+                    self.faults.defer(e, tick)
+                    continue
+                self._fault_nan_slots.add(victim)
+                self.faults.record(e.kind)
+            elif e.kind == "hang":
+                cand = self._fault_decode_slots(e.request_id)
+                if not cand:
+                    self.faults.defer(e, tick)
+                    continue
+                self._hang_slot = cand[e.pick % len(cand)]
+                self._hang_pending = self.faults.fcfg.hang_s
+                self.faults.record(e.kind)
+            elif e.kind == "alloc_spike":
+                if self._alloc is None or self._alloc.free_pages == 0:
+                    self.faults.defer(e, tick)
+                    continue
+                n = min(self.faults.fcfg.spike_pages,
+                        self._alloc.free_pages)
+                pages = self._alloc.alloc(n, owner="fault-injector")
+                self._spike_holds.append(
+                    (tick + self.faults.fcfg.spike_ticks, pages)
+                )
+                self.faults.record(e.kind)
+            elif e.kind == "page_corrupt":
+                if self._alloc is None:
+                    continue  # dense layout: no pages to corrupt; drop
+                mode = self.faults.fcfg.corrupt_mode
+                cand = self._fault_page_candidates(mode, e.request_id)
+                if not cand:
+                    self.faults.defer(e, tick)
+                    continue
+                page = cand[e.pick2 % len(cand)]
+                from repro.serve import faults as _F
+                with compat.use_mesh(self.mesh):
+                    self.caches = _F.page_edit_step(mode)(
+                        self.caches, jnp.asarray(page, jnp.int32)
+                    )
+                if mode == "nan":
+                    # a NaN page must be scrubbed before recycling; flipped
+                    # bits stay finite and are fully overwritten/masked for
+                    # the next owner, so they need no scrub
+                    self._corrupted_pages.add(page)
+                self.faults.record(e.kind)
+
+    def _fault_decode_slots(self, request_id) -> list[int]:
+        """Slots a decode-dispatch fault (nan/hang) can target: actively
+        decoding, not replaying history (a replay row's output is
+        discarded — poisoning it would be invisible), optionally pinned
+        to one request id (quarantine tests)."""
+        return [
+            s for s in range(self.scfg.batch)
+            if (r := self.active[s]) is not None
+            and r["_status"] == "decoding"
+            and s not in self._replay
+            and r["id"] not in self._fault_nan_inflight
+            and (request_id is None or r["id"] == request_id)
+        ]
+
+    def _fault_page_candidates(self, mode: str, request_id) -> list[int]:
+        """Physical pages a corruption can hit. ``nan`` mode targets an
+        UNSHARED page of a decoding slot — the victim's own sentinel
+        catches it on its next attention read, nobody else maps the page.
+        ``bitflip`` mode targets a trie-cached page no slot currently
+        maps (trie pin only) — finite garbage that only the checksum
+        validation at the next prefix share can catch."""
+        if mode == "nan":
+            return [
+                p
+                for s in self._fault_decode_slots(request_id)
+                for p in self._slot_pages[s]
+                if self._alloc.refs.get(p) == 1
+            ]
+        if self._prefix is None:
+            return []
+        mapped = {p for pages in self._slot_pages for p in pages}
+        cand = []
+        stack = list(self._prefix.root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.page not in mapped and self._alloc.refs.get(
+                node.page
+            ) == 1:
+                cand.append(node.page)
+            stack.extend(node.children.values())
+        return sorted(cand)
 
     # -- paged-pool bookkeeping ------------------------------------------
 
@@ -1350,8 +1731,12 @@ class BatchScheduler:
             reclaim = (
                 self._prefix.reclaimable() if self._prefix is not None else 0
             )
-            fatal = self.scfg.preempt_policy == "never" or (
-                not others_hold and reclaim == 0
+            # an injected allocator spike holds pages that WILL come back
+            # in a few ticks: never a fatal exhaustion — park and wait it
+            # out (same transient-pressure semantics as a co-tenant burst)
+            fatal = not self._spike_holds and (
+                self.scfg.preempt_policy == "never"
+                or (not others_hold and reclaim == 0)
             )
             raise _PoolPressure(
                 fatal,
@@ -1398,6 +1783,10 @@ class BatchScheduler:
         prompt = req["prompt"]
         psize = self.scfg.page_size
         chain, donor, donor_rows = self._prefix.match(prompt)
+        if self._fingerprint is not None:
+            chain, donor, donor_rows = self._verify_chain(
+                chain, donor, donor_rows
+            )
         st = self._prefix.stats
         if self._has_recurrent:
             for j, node in enumerate(chain):
@@ -1448,9 +1837,44 @@ class BatchScheduler:
         st["pages_shared"] += n_full
         return use
 
+    def _verify_chain(self, chain, donor, donor_rows):
+        """Per-page checksum validation at sharing time
+        (``ServeConfig.checksum_pages``): recompute each matched page's
+        content fingerprint and compare against the value recorded at
+        trie insert. A mismatch (bit rot, a fault-injector bit flip —
+        values can stay finite, so the NaN sentinel alone cannot catch
+        it) evicts the damaged node's whole subtree and truncates the
+        match just before it: the request re-prefills those tokens fresh
+        instead of reading corrupt K/V, and no future request can match
+        the poisoned entry again."""
+        with compat.use_mesh(self.mesh):
+            for j, node in enumerate(chain):
+                if node.checksum is None:
+                    continue
+                now = int(self._fingerprint(
+                    self.caches, jnp.asarray(node.page, jnp.int32)
+                ))
+                if now != node.checksum:
+                    self.stats["checksum_failures"] += 1
+                    self._prefix.evict_subtree(node)
+                    self.session.event("recovery")
+                    return chain[:j], None, 0
+            if donor is not None and donor.checksum is not None:
+                now = int(self._fingerprint(
+                    self.caches, jnp.asarray(donor.page, jnp.int32)
+                ))
+                if now != donor.checksum:
+                    self.stats["checksum_failures"] += 1
+                    self._prefix.evict_subtree(donor)
+                    self.session.event("recovery")
+                    donor, donor_rows = None, 0
+        return chain, donor, donor_rows
+
     def _release_slot_pages(self, slot: int) -> None:
         if self._alloc is None or not self._slot_pages[slot]:
             return
+        if self._corrupted_pages:
+            self._scrub_slot(slot)
         self._alloc.release(self._slot_pages[slot])
         self._slot_pages[slot] = []
         self._tables[slot, :] = -1
@@ -1519,6 +1943,16 @@ class BatchScheduler:
         }
         out["pressure"]["queued"] = len(self.queue)
         out["pressure"]["parked"] = len(self._parked)
+        # recovery accounting: what the self-healing layer did (all zeros
+        # outside chaos/fault conditions — the block is always present so
+        # bench artifacts and dashboards have a stable shape)
+        out["recovery"] = {
+            k: self.stats[k]
+            for k in ("retries", "backoff_total_ticks", "quarantined",
+                      "shed", "checksum_failures", "watchdog_trips")
+        }
+        if self.faults is not None:
+            out["recovery"]["injected"] = dict(self.faults.counters)
         return out
 
     def _dispatch_prefill_chunk(self) -> None:
@@ -1547,7 +1981,7 @@ class BatchScheduler:
         )
         if self.scfg.paged:
             args += (self._tables_device(),)
-        next_tok, self.caches = self.prefill(*args, self.rng_keys)
+        next_tok, bad, self.caches = self.prefill(*args, self.rng_keys)
         task["done"] = start + L
         self.stats["prefill_chunks"] += 1
         if task["done"] >= len(prompt):
@@ -1558,8 +1992,21 @@ class BatchScheduler:
             if self._prefix is not None:
                 # cache the prompt's full pages for future requests: shared
                 # pages re-touch their nodes, fresh/CoW pages insert new
-                # ones (each pinned with a trie-owned reference)
-                self._prefix.insert(req["prompt"], self._slot_pages[slot])
+                # ones (each pinned with a trie-owned reference); with
+                # checksum_pages on, fingerprint each full prompt page now
+                # — its content is final (decode writes land past the
+                # prompt) and every future share validates against it
+                checks = None
+                if self._fingerprint is not None:
+                    n_full = len(req["prompt"]) // self.scfg.page_size
+                    checks = [
+                        int(self._fingerprint(
+                            self.caches, jnp.asarray(p, jnp.int32)
+                        ))
+                        for p in self._slot_pages[slot][:n_full]
+                    ]
+                self._prefix.insert(req["prompt"], self._slot_pages[slot],
+                                    checksums=checks)
             self._prefills.remove(task)
             self._prefilling[slot] = None
             self.active[slot] = req
@@ -1576,7 +2023,9 @@ class BatchScheduler:
                     self._replay[slot] = list(req["generated"][1:])
             else:
                 req["_pending"] += 1
-                self._pending.append((next_tok.reshape(1, 1), [req]))
+                self._pending.append(
+                    (next_tok.reshape(1, 1), bad.reshape(1), [req])
+                )
                 self._seeds[slot] = next_tok[0]
 
     def _apply_seeds(self) -> None:
@@ -1596,19 +2045,37 @@ class BatchScheduler:
 
     def _flush(self) -> None:
         """Materialize all pending tokens in ONE host transfer; retire
-        requests that hit their budget or emitted EOS."""
+        requests that hit their budget or emitted EOS. The NaN/Inf
+        sentinel rides the same transfer: a flagged row's token is
+        garbage (sampled from poisoned logits) — it is dropped, and so is
+        every LATER row of the same request in this flush (tokens decoded
+        downstream of the poison are finite but wrong), then the request
+        goes through ``_fault_retry`` instead of streaming poison."""
         if not self._pending:
             return
         pending, self._pending = self._pending, []
-        host = jax.device_get([toks for toks, _ in pending])  # single transfer
+        host = jax.device_get(
+            [[toks, bad] for toks, bad, _ in pending]
+        )  # single transfer
         self.stats["readbacks"] += 1
-        for toks, (_, reqmap) in zip(host, pending):
+        poisoned: list[dict] = []
+        poisoned_ids: set = set()
+        for (toks, bad), (_, _, reqmap) in zip(host, pending):
             for row, req in enumerate(reqmap):
                 if req is None:
                     continue
                 req["_pending"] -= 1
+                if bool(bad[row]):
+                    # the poison landed on the host: the request is
+                    # targetable again once its retry resolves
+                    self._fault_nan_inflight.discard(req["id"])
                 if req["_cancelled"]:
                     continue  # cancelled mid-stream: drop the dispatched row
+                if bool(bad[row]) or req["id"] in poisoned_ids:
+                    if req["id"] not in poisoned_ids:
+                        poisoned_ids.add(req["id"])
+                        poisoned.append(req)
+                    continue
                 req["generated"].append(int(toks[row, 0]))
         eos = self.scfg.eos_id
         for slot, req in enumerate(self.active):
@@ -1626,6 +2093,13 @@ class BatchScheduler:
                 self.active[slot] = None
                 self._release_slot_pages(slot)
                 self._replay.pop(slot, None)
+        # after retirement (a poisoned request cannot be done — its bad
+        # rows never appended): all pending rows are drained above, and a
+        # parked request dispatches nothing, so no stale poisoned row can
+        # surface in a later flush
+        for req in poisoned:
+            if req["_status"] not in _TERMINAL:
+                self._fault_retry(req)
 
     def drain(self) -> None:
         """Run the scheduler to quiescence: every queued, parked,
@@ -1641,12 +2115,23 @@ class BatchScheduler:
         )
         # generous tick budget: prefill chunks + decode budget per request,
         # with headroom for preemption/replay rounds (bounded — the oldest
-        # highest-priority request always makes progress)
-        budget = 64 + (len(live) + 2) * sum(
+        # highest-priority request always makes progress) plus fault-
+        # recovery slack: each request may burn its full retry budget
+        # (each retry is one more recompute round plus its backoff), and
+        # injected allocator spikes stall everyone for spike_ticks
+        rounds = len(live) + 2 + self.scfg.max_retries
+        budget = 64 + rounds * sum(
             r["max_new"] + len(r["prompt"]) // max(self.scfg.prefill_chunk, 1)
             + len(r["prompt"]) + 1
             for r in live
         )
+        budget += len(live) * self.scfg.max_retries * (
+            self.scfg.retry_backoff_cap + 1
+        )
+        if self.faults is not None:
+            budget += 64 + self.faults.fcfg.spike_ticks * (
+                self.faults.fcfg.n_alloc_spike + 1
+            )
         ticks = 0
         while (self.queue or self._parked or self._prefills
                or any(r is not None for r in self.active)):
@@ -1657,9 +2142,17 @@ class BatchScheduler:
                     f"drain() reached no quiescence after {ticks} ticks: "
                     f"queued={len(self.queue)} parked={len(self._parked)} "
                     f"active={sum(r is not None for r in self.active)} "
-                    f"prefilling={len(self._prefills)}"
+                    f"prefilling={len(self._prefills)} "
+                    f"[kv_cache_stats: {self.kv_cache_stats()}]"
                 )
         self._flush()
+        if self._spike_holds and self._alloc is not None:
+            # the workload finished while an injected spike still held
+            # pool pages: give them back — a chaos run must end with the
+            # same zero-leak guarantee as any other drain
+            for _, pages in self._spike_holds:
+                self._alloc.release(pages)
+            self._spike_holds = []
 
     # -- the tick --------------------------------------------------------
 
@@ -1668,6 +2161,8 @@ class BatchScheduler:
         at most one prefill chunk dispatch. Returns #busy slots."""
         self.stats["ticks"] += 1
         self._attach()
+        if self.faults is not None or self._spike_holds:
+            self._apply_faults()
         chunks_at_tick_start = self.stats["prefill_chunks"]
         with compat.use_mesh(self.mesh):
             if not self.scfg.overlap:
@@ -1707,10 +2202,30 @@ class BatchScheduler:
                 # the ``self.pos`` mutations below (and next tick's attach
                 # resets) instead of this tick's values
                 pos_now = jnp.asarray(self.pos.copy())
-                self.tokens, self.caches = self.decode(
+                fault_mask = self._fault_mask_zero
+                if self._fault_nan_slots:
+                    # injected logit poison for this dispatch only: the
+                    # masked slots' logits become NaN ahead of the
+                    # sentinel (the all-False mask every normal tick is a
+                    # bitwise no-op select)
+                    m = np.zeros(self.scfg.batch, bool)
+                    m[list(self._fault_nan_slots)] = True
+                    for s in self._fault_nan_slots:
+                        if decoding[s] is not None:
+                            self._fault_nan_inflight.add(decoding[s]["id"])
+                    self._fault_nan_slots.clear()
+                    fault_mask = jnp.asarray(m)
+                t0 = time.perf_counter()
+                if self._hang_pending:
+                    # injected dispatch hang (a wedged host thread): burn
+                    # wall time where the watchdog measures it
+                    time.sleep(self._hang_pending)
+                    self._hang_pending = 0.0
+                self.tokens, bad_dev, self.caches = self.decode(
                     self.params, self.tokens, pos_now,
-                    *args, self.rng_keys,
+                    *args, self.rng_keys, fault_mask,
                 )
+                dispatch_s = time.perf_counter() - t0
                 self.stats["decode_steps"] += 1
                 if self.stats["prefill_chunks"] > chunks_at_tick_start:
                     # prefill work ran before this tick's decode dispatch:
@@ -1724,10 +2239,25 @@ class BatchScheduler:
                     None if (r is not None and s in self._replay) else r
                     for s, r in enumerate(decoding)
                 ]
-                self._pending.append((self.tokens, reqmap))
+                self._pending.append((self.tokens, bad_dev, reqmap))
                 for req in reqmap:
                     if req is not None:
                         req["_pending"] += 1
+                if (self.scfg.watchdog_deadline_s is not None
+                        and dispatch_s > self.scfg.watchdog_deadline_s):
+                    # the dispatch call itself blew its deadline (a wedged
+                    # dispatch path; in chaos runs, the injected hang).
+                    # The late tokens are kept — identity is preserved —
+                    # and the hung slot's request retries so a recurring
+                    # wedge cannot stall its stream forever
+                    self.stats["watchdog_trips"] += 1
+                    self.session.event("recovery")
+                    victim, self._hang_slot = self._hang_slot, None
+                    req = (
+                        self.active[victim] if victim is not None else None
+                    )
+                    if req is not None and req["_status"] not in _TERMINAL:
+                        self._fault_retry(req)
                 # advance the forced-input schedule: the popped history
                 # token overrides the sampled output as next tick's input
                 # for its slot; when the list empties, the NEXT output is

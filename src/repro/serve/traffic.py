@@ -151,7 +151,7 @@ def _percentile(sorted_vals: list[float], q: float) -> float:
 
 
 def replay(sched, workload: list[TrafficRequest], *,
-           max_ticks: int | None = None) -> dict:
+           max_ticks: int | None = None, faults=None) -> dict:
     """Drive ``sched`` through ``workload`` and measure it.
 
     Open loop: request ``r`` is submitted at the top of scheduler tick
@@ -163,7 +163,17 @@ def replay(sched, workload: list[TrafficRequest], *,
     Goodput counts only tokens of requests that COMPLETED — work spent on
     streams that were later cancelled or failed is throughput, not
     goodput.
+
+    Chaos mode: pass ``faults`` (a ``repro.serve.faults.FaultInjector``,
+    itself a pure function of its ``FaultConfig`` seed) to compose a
+    seeded fault schedule with the seeded workload — the scheduler
+    applies due injections tick by tick and the metrics grow the
+    recovery accounting (goodput-under-faults is what the nightly chaos
+    soak records). The same (TrafficConfig, FaultConfig) pair replays
+    bit-for-bit.
     """
+    if faults is not None:
+        sched.faults = faults
     workload = sorted(workload, key=lambda r: (r.arrival_tick, r.request_id))
     cancels = sorted(
         ((r.cancel_tick, r.request_id) for r in workload
@@ -173,6 +183,13 @@ def replay(sched, workload: list[TrafficRequest], *,
     budget = max_ticks if max_ticks is not None else (
         horizon + 64 + 4 * sum(r.max_new + len(r.prompt) for r in workload)
     )
+    if faults is not None and max_ticks is None:
+        # chaos slack: retries recompute work and serve backoff, spikes
+        # stall the pool for a few ticks each
+        budget += sum(
+            (r.max_new + len(r.prompt)) * sched.scfg.max_retries
+            for r in workload
+        ) + faults.fcfg.spike_ticks * (faults.fcfg.n_alloc_spike + 1)
     submit_t: dict[int, float] = {}
     ttft: dict[int, float] = {}
     depths: list[int] = []
@@ -223,6 +240,7 @@ def replay(sched, workload: list[TrafficRequest], *,
         "completed": len(sched.completed),
         "cancelled": len(sched.cancelled),
         "failed": len(sched.failed),
+        "shed": len(sched.shed),
         "ticks": tick,
         "wall_s": round(wall, 4),
         "good_tokens": good_tokens,
@@ -239,6 +257,7 @@ def replay(sched, workload: list[TrafficRequest], *,
         "cancellations": press.get("cancellations", 0),
         "evictions_for_preempt": press.get("evictions_for_preempt", 0),
         "peak_queue_depth": press.get("peak_queue_depth", 0),
+        "recovery": stats.get("recovery", {}),
         "kv": stats,
         "sched_stats": dict(sched.stats),
         "generated": {str(r["id"]): r["generated"] for r in sched.completed},

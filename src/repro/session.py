@@ -433,6 +433,17 @@ class PerfSession:
             return _NULL_REGION
         return _Region(self, name, sync)
 
+    def event(self, name: str, outputs: Any = None, **aux: Any) -> None:
+        """One-shot region visit for sparse, host-side events (a retry, a
+        quarantine, a watchdog trip): enter the region, record one observed
+        step carrying ``aux``, and exit — so rare recovery actions show up
+        in the report next to the hot-loop regions without the caller
+        managing a context. No-op when the session is disabled."""
+        if not self.enabled:
+            return
+        with self.region(name):
+            self.observe_step(outputs, **aux)
+
     # -- per-step hooks (thin passthroughs; patchable per instance) -----
 
     def observe_step(self, outputs: Any = None, **aux: Any) -> None:

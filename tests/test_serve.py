@@ -1182,3 +1182,54 @@ def test_stream_async_interleaves_two_requests():
         sched.drain()
     assert got_a == _reference_generate(cfg, mesh, params, prompts["a"], 5)
     assert got_b == _reference_generate(cfg, mesh, params, prompts["b"], 5)
+
+
+def _stall_request(sched, request_id):
+    """Wedge a request: parked with a ready tick the scheduler will never
+    reach — the shape of a stalled retry backoff or a lost resume."""
+    req = sched._by_id[request_id]
+    sched.queue.remove(req)
+    req["_status"] = "retrying"
+    req["_not_before"] = 10**9
+    sched._parked.append(req)
+
+
+def test_result_and_stream_timeout_raise():
+    """``result(timeout=)``/``stream(timeout=)`` bound the scheduler ticks
+    spent waiting between tokens: a wedged request raises ``TimeoutError``
+    instead of spinning, and the default (no timeout) still raises the
+    livelock ``RuntimeError`` eventually rather than hanging."""
+    cfg, mesh, params = _serve_fixtures()
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=2, prefill_chunk=4, paged=True,
+                        page_size=8), params,
+        )
+        handle = sched.submit(list(range(4, 12)), request_id=0, max_new=4)
+        _stall_request(sched, 0)
+        with pytest.raises(TimeoutError, match="no progress"):
+            handle.result(timeout=5)
+        with pytest.raises(TimeoutError, match="no progress"):
+            next(iter(handle.stream(timeout=3)))
+    assert handle.status == "retrying", "timeout must not kill the request"
+
+
+def test_drain_nonquiescence_raises_with_stats():
+    """drain() on a scheduler that cannot reach quiescence raises a
+    descriptive ``RuntimeError`` carrying the kv_cache_stats snapshot —
+    the bug report IS the error message."""
+    cfg, mesh, params = _serve_fixtures()
+    with mesh:
+        sched = BatchScheduler(
+            cfg, mesh,
+            ServeConfig(max_len=64, batch=2, prefill_chunk=4, paged=True,
+                        page_size=8), params,
+        )
+        sched.submit(list(range(4, 12)), request_id=0, max_new=4)
+        _stall_request(sched, 0)
+        with pytest.raises(RuntimeError) as exc:
+            sched.drain()
+    msg = str(exc.value)
+    assert "no quiescence" in msg and "parked=1" in msg
+    assert "kv_cache_stats" in msg and "'recovery'" in msg

@@ -100,6 +100,16 @@ def test_replay_end_to_end_under_pressure():
     assert m["completed"] + m["cancelled"] + m["failed"] == len(workload)
     assert m["failed"] == 0, "pressure must preempt, not fail"
     assert m["good_tokens"] > 0 and m["goodput_tokens_per_sec"] > 0
+    # goodput accounting regression pin: goodput counts COMPLETED streams
+    # only; work burned on later-cancelled streams is reported separately
+    # as cancelled_tokens, never mixed into good_tokens
+    assert m["good_tokens"] == sum(
+        len(r["generated"]) for r in sched.completed
+    )
+    assert m["cancelled_tokens"] == sum(
+        len(r["generated"]) for r in sched.cancelled
+    )
+    assert m["cancelled"] > 0, "workload must actually exercise cancels"
     assert m["ttft_p99_s"] >= m["ttft_p50_s"] >= 0
     assert m["cancellations"] == m["cancelled"]
     assert sched._alloc.used == 0, "pages leaked after drain"
@@ -111,3 +121,48 @@ def test_replay_end_to_end_under_pressure():
     # of the same workload completes the same requests with the same bits
     _, ample = run(num_pages=16)
     assert ample["generated"] == m["generated"]
+
+
+def test_chaos_replay_composes_faults_with_workload():
+    """replay(faults=...) attaches the seeded injector: the same
+    (TrafficConfig, FaultConfig) pair replays the same streams bit-for-bit,
+    the recovery counters surface in the metrics, and recovery never
+    changes WHAT a surviving request computed — only when."""
+    from repro.serve.faults import FaultConfig, FaultInjector
+
+    cfg = smoke_config("tinyllama-1.1b").replace(
+        compute_dtype_name="float32", param_dtype_name="float32"
+    )
+    mesh = make_host_mesh()
+    params = init_params(T.model_params(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    tcfg = TrafficConfig(
+        n_requests=5, seed=9, arrival="burst", rate=1.0,
+        prompt_short=(4, 8), prompt_long=(10, 14), max_new_short=(3, 5),
+        max_new_long=(6, 8), cancel_frac=0.0, vocab_hi=cfg.vocab,
+    )
+    workload = generate_workload(tcfg)
+    fcfg = FaultConfig(seed=2, horizon_ticks=16, n_nan=1, n_page_corrupt=0,
+                       n_alloc_spike=1, n_hang=0)
+
+    def run(chaos):
+        with mesh:
+            sched = BatchScheduler(
+                cfg, mesh,
+                ServeConfig(max_len=64, batch=2, prefill_chunk=4, paged=True,
+                            page_size=8, num_pages=8), params,
+            )
+            m = replay(sched, workload,
+                       faults=FaultInjector(fcfg) if chaos else None)
+        return sched, m
+
+    sched, m = run(chaos=True)
+    assert m["recovery"]["retries"] >= 1
+    assert m["recovery"]["injected"]["nan_injected"] == 1
+    assert m["completed"] == len(workload) and m["failed"] == 0
+    assert sched._alloc.used == 0, "chaos replay leaked pages"
+    _, m2 = run(chaos=True)
+    assert m2["generated"] == m["generated"], "chaos replay must be seeded"
+    _, base = run(chaos=False)
+    assert base["generated"] == m["generated"], \
+        "fault recovery changed surviving streams"
