@@ -30,7 +30,11 @@ fault kind at least once (NaN logits, KV-page corruption, allocator
 spike, hung dispatch), every recovered request's tokens must be bitwise
 identical to the fault-free run — greedy AND sampled — a retry-exhausted
 request must be quarantined (terminal ``failed``, pages freed,
-co-residents untouched), and zero pages may leak after drain.
+co-residents untouched), and zero pages may leak after drain. Last the
+speculation gate: spec-decode on/off must produce bitwise-identical
+tokens on a repetitive AND a non-repetitive trace, greedy AND sampled,
+with a STRICT tokens/sec speedup and acceptance_rate > 0 on the
+repetitive workload and zero pages leaked after drain.
 """
 
 from __future__ import annotations

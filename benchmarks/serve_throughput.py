@@ -53,14 +53,28 @@ every fault kind injected at least once), quarantine-works (a request
 whose faults exhaust ``max_retries`` ends terminal ``failed`` while its
 neighbors stay bitwise intact) and zero pages leaked after drain.
 
+A seventh section (``"speculation"`` / ``run_spec`` / ``--spec``) is the
+speculative-decode A/B: the same trace with ``spec_decode`` on vs off, on
+a repetitive trace (residual-zeroed "copy regime" weights whose greedy
+decode provably cycles — the prompt-lookup drafter's home turf) and a
+non-repetitive trace (random weights and prompts, where the drafter
+proposes little and speculation must degrade gracefully to sequential
+decode). Reports bitwise token identity, tokens/sec speedup, TTFT,
+acceptance rate, dispatches saved, and pages leaked after drain;
+``--check`` gates identity on both traces in greedy AND sampled modes, a
+STRICT tokens/sec speedup plus acceptance_rate > 0 on the repetitive
+trace, and zero leaked pages.
+
     PYTHONPATH=src:. python benchmarks/serve_throughput.py [arch ...]
     PYTHONPATH=src:. python benchmarks/serve_throughput.py --traffic [arch ...]
     PYTHONPATH=src:. python benchmarks/serve_throughput.py --chaos [arch ...]
+    PYTHONPATH=src:. python benchmarks/serve_throughput.py --spec [arch ...]
 
 With archs given (the nightly sweep), the first writes BENCH_serve.json
 and each additional arch writes BENCH_serve_<arch>.json; ``--traffic``
-writes ``BENCH_serve_traffic_<arch>.json`` per arch and ``--chaos``
-writes ``BENCH_serve_chaos_<arch>.json`` per arch.
+writes ``BENCH_serve_traffic_<arch>.json`` per arch, ``--chaos`` writes
+``BENCH_serve_chaos_<arch>.json`` per arch and ``--spec`` writes
+``BENCH_serve_spec_<arch>.json`` per arch.
 """
 
 from __future__ import annotations
@@ -106,7 +120,9 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
              paged: bool = True, page_size: int = 16,
              num_pages: int | None = None, prefix_cache: bool = False,
              greedy: bool = True, temperature: float = 1.0,
-             top_k: int | None = None, warm_first: bool = False) -> dict:
+             top_k: int | None = None, sample_seed: int = 0,
+             spec_decode: bool = False, spec_k: int = 4,
+             spec_min_match: int = 2, warm_first: bool = False) -> dict:
     """One scheduler pass; returns the measured dict for BENCH_serve.json.
 
     ``warm_first`` runs ``prompts[0]`` to completion before the rest are
@@ -123,7 +139,9 @@ def run_mode(cfg, mesh, params, prompts, *, overlap: bool, max_new: int,
                         prefill_chunk=prefill_chunk, overlap=overlap,
                         paged=paged, page_size=page_size,
                         num_pages=num_pages, prefix_cache=prefix_cache,
-                        greedy=greedy, temperature=temperature, top_k=top_k),
+                        greedy=greedy, temperature=temperature, top_k=top_k,
+                        sample_seed=sample_seed, spec_decode=spec_decode,
+                        spec_k=spec_k, spec_min_match=spec_min_match),
             params,
         )
         if warm_first:
@@ -531,6 +549,84 @@ def _workload_pages(prompts, max_new: int, batch: int, page_size: int) -> int:
     return batch * (-(-need // page_size))
 
 
+def _copy_regime(params):
+    """Zero the residual blocks so the logits become a pure function of the
+    LAST token (embed -> final norm -> unembed: a near-Markov map over the
+    vocab). Greedy decode on such a model must fall into a cycle
+    (pigeonhole), which is exactly the workload a prompt-lookup drafter can
+    predict — random init weights generate aperiodic continuations no
+    n-gram lookup ever matches, and the spec A/B would measure pure
+    overhead. The zeroed model runs the exact same jitted step functions
+    at the exact same shapes, so the dispatch-count and wall-clock win it
+    measures is the real one."""
+    import jax
+
+    return dict(params, slots=jax.tree_util.tree_map(
+        lambda x: x * 0.0, params["slots"]))
+
+
+def _spec_repetitive_trace():
+    """Prompts built from a repeated 4-gram: the drafter locks on from the
+    prompt itself, and the copy-regime model keeps the repetition going."""
+    pat = [5, 9, 13, 7]
+    return [pat * 4, pat * 6, [2, 3] + pat * 5]
+
+
+def run_spec(cfg_name: str = "tinyllama-1.1b", *, spec_k: int = 4,
+             greedy: bool = True, max_new: int = 160,
+             max_new_nonrep: int = 12) -> dict:
+    """Speculative-decode A/B: the same trace with ``spec_decode`` on vs
+    off, on a repetitive trace (copy-regime weights — the drafter's home
+    turf) and a non-repetitive one (random weights + random prompts — the
+    drafter proposes little and speculation must degrade gracefully to
+    the sequential path). Reports bitwise token identity, tokens/sec
+    speedup, TTFT, acceptance rate and pages leaked after drain."""
+    cfg, mesh, params = _build(cfg_name)
+    kw = dict(overlap=True, batch=4, prefill_chunk=16, max_len=256,
+              page_size=16, spec_k=spec_k)
+    if not greedy:
+        kw.update(greedy=False, temperature=0.8, top_k=20, sample_seed=3)
+    traces = {
+        "repetitive": (_copy_regime(params), _spec_repetitive_trace(),
+                       max_new),
+        "non_repetitive": (params, _request_trace(cfg, 3, seed=7),
+                           max_new_nonrep),
+    }
+    out: dict = {"arch": cfg_name, "spec_k": spec_k, "greedy": greedy}
+    for name, (ps, prompts, new) in traces.items():
+        mkw = dict(kw, max_new=new,
+                   num_pages=_workload_pages(prompts, new, kw["batch"],
+                                             kw["page_size"]))
+        # warmup: spec on/off are distinct jit keys (the verify step only
+        # exists on the spec side) — compile both outside the timed passes
+        for spec in (False, True):
+            run_mode(cfg, mesh, ps, prompts[:2], spec_decode=spec,
+                     **{**mkw, "max_new": 2})
+        off = run_mode(cfg, mesh, ps, prompts, spec_decode=False, **mkw)
+        on = run_mode(cfg, mesh, ps, prompts, spec_decode=True, **mkw)
+        gen_on, gen_off = on.pop("generated"), off.pop("generated")
+        spec = on["kv"]["speculation"]
+        out[name] = {
+            # the tentpole guarantee: accepted draft tokens are exactly the
+            # tokens sequential decode would have produced
+            "identical_tokens": gen_on == gen_off,
+            "tokens_per_sec_speedup": round(
+                on["tokens_per_sec"] / max(off["tokens_per_sec"], 1e-9), 3),
+            # deterministic win (no wall-clock jitter): decode dispatches
+            # the accepted drafts made unnecessary
+            "dispatches_saved": (off["stats"]["decode_steps"]
+                                 - on["stats"]["decode_steps"]),
+            "acceptance_rate": spec["acceptance_rate"],
+            "mean_accepted_len": spec["mean_accepted_len"],
+            "tokens_per_dispatch": spec["tokens_per_dispatch"],
+            "leaked_pages_on": on["kv"]["pages_in_use"],
+            "leaked_pages_off": off["kv"]["pages_in_use"],
+            "spec_on": on,
+            "spec_off": off,
+        }
+    return out
+
+
 def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
         prefill_chunk: int = 8, cfg_name: str = "tinyllama-1.1b",
         page_size: int = 16, max_len: int = 128) -> dict:
@@ -569,6 +665,9 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
         arrival: run_traffic(cfg, mesh, params, arrival=arrival)
         for arrival in ("poisson", "burst")
     }
+    # speculative decode A/B at its own tuned shape (the strict-speedup
+    # comparison needs enough decode steps that dispatch savings dominate)
+    speculation = run_spec(cfg_name)
     ostats = paged_ov["stats"]
     kv_paged, kv_dense = paged_ov["kv"], dense_ov["kv"]
     return {
@@ -601,6 +700,7 @@ def run(n_requests: int = 6, max_new: int = 16, batch: int = 4,
         "dense_overlap": dense_ov,
         "prefix": prefix,
         "traffic": traffic,
+        "speculation": speculation,
     }
 
 
@@ -696,6 +796,44 @@ def check(out_path: str | None = None) -> str:
             raise AssertionError(
                 f"traffic[{arrival}] TTFT percentiles inverted: {m}"
             )
+    # speculative decode: bitwise identity on BOTH traces, a strict
+    # tokens/sec win + real acceptance on the repetitive one, and zero
+    # pages leaked after drain with rejections in play
+    spec = result["speculation"]
+    for name in ("repetitive", "non_repetitive"):
+        s = spec[name]
+        if not s["identical_tokens"]:
+            raise AssertionError(
+                f"speculative decode changed tokens on the {name} trace "
+                "(greedy)"
+            )
+        if s["leaked_pages_on"] or s["leaked_pages_off"]:
+            raise AssertionError(
+                f"speculative {name} run leaked pages: "
+                f"on={s['leaked_pages_on']} off={s['leaked_pages_off']}"
+            )
+    rep = spec["repetitive"]
+    if rep["acceptance_rate"] <= 0:
+        raise AssertionError(
+            "drafter accepted nothing on the repetitive trace: "
+            f"{rep['acceptance_rate']}"
+        )
+    if rep["tokens_per_sec_speedup"] <= 1.0:
+        raise AssertionError(
+            "speculation did not beat plain decode on the repetitive "
+            f"trace: {rep['tokens_per_sec_speedup']}x "
+            f"(dispatches_saved={rep['dispatches_saved']})"
+        )
+    # sampled mode must stay bitwise-invariant too (per-request keys folded
+    # at the accepted position == the keys sequential decode would fold);
+    # smaller max_new — identity is the gate here, not throughput
+    sspec = run_spec(greedy=False, max_new=24, max_new_nonrep=8)
+    for name in ("repetitive", "non_repetitive"):
+        if not sspec[name]["identical_tokens"]:
+            raise AssertionError(
+                f"speculative decode changed sampled tokens on the {name} "
+                "trace (temperature=0.8, top_k=20)"
+            )
     _save(result, out_path)
     return csv_line(
         "check_serve_paged",
@@ -703,7 +841,9 @@ def check(out_path: str | None = None) -> str:
         f"tok/s={ov['tokens_per_sec']};kv_savings={result['kv']['savings_ratio']}x;"
         f"pool_util={result['kv']['paged']['pool_utilization']};"
         f"prefix_chunks_saved={prefix['prefill_chunks_saved']};"
-        f"traffic_goodput={result['traffic']['burst']['goodput_tokens_per_sec']}",
+        f"traffic_goodput={result['traffic']['burst']['goodput_tokens_per_sec']};"
+        f"spec_speedup={rep['tokens_per_sec_speedup']}x;"
+        f"spec_accept={rep['acceptance_rate']}",
     )
 
 
@@ -755,7 +895,7 @@ def _lines(result: dict, path: str) -> list[str]:
                  f"peak_pages_below={pf['peak_pages_below_no_sharing']};"
                  f"prefill_chunks_saved={pf['prefill_chunks_saved']};"
                  f"ttft_speedup={pf['ttft_mean_speedup']}x"),
-    ] + [
+    ] + _spec_lines(result["speculation"], tag) + [
         csv_line(f"serve_traffic_{arrival}[{tag}]",
                  tr["wall_s"] * 1e6 / max(tr["ticks"], 1),
                  f"goodput={tr['goodput_tokens_per_sec']}tok/s;"
@@ -765,6 +905,44 @@ def _lines(result: dict, path: str) -> list[str]:
                  f"cancel={tr['cancellations']}")
         for arrival, tr in result["traffic"].items()
     ]
+
+
+def _spec_lines(spec: dict, tag: str) -> list[str]:
+    lines = []
+    for name in ("repetitive", "non_repetitive"):
+        s = spec[name]
+        on = s["spec_on"]
+        lines.append(csv_line(
+            f"serve_spec_{name}[{tag}]",
+            on["wall_s"] * 1e6 / max(on["ticks"], 1),
+            f"speedup={s['tokens_per_sec_speedup']}x;"
+            f"accept_rate={s['acceptance_rate']};"
+            f"tok_per_dispatch={s['tokens_per_dispatch']};"
+            f"dispatches_saved={s['dispatches_saved']};"
+            f"identical={s['identical_tokens']};"
+            f"ttft={on['ttft_mean_s']}s",
+        ))
+    return lines
+
+
+def main_spec(archs: list[str] | None = None) -> list[str]:
+    """The nightly speculation sweep: per arch, the spec on/off A/B on the
+    repetitive and non-repetitive traces, written to
+    ``BENCH_serve_spec_<arch>.json`` next to the serve artifacts (the
+    Pages assembly globs ``BENCH_serve*.json``, so the speculation
+    trajectory rides the existing pipeline)."""
+    archs = archs or ["tinyllama-1.1b"]
+    lines: list[str] = []
+    for arch in archs:
+        result = {"arch": arch, "speculation": run_spec(arch)}
+        path = _save(result, os.path.join(
+            os.path.dirname(RESULTS_DIR) or "results",
+            f"BENCH_serve_spec_{arch}.json",
+        ))
+        lines += _spec_lines(result["speculation"], arch)
+        lines.append(csv_line(
+            f"serve_spec_json[{arch}]", 0.0, f"json={path}"))
+    return lines
 
 
 def main_traffic(archs: list[str] | None = None) -> list[str]:
@@ -851,6 +1029,9 @@ if __name__ == "__main__":
             print(line)
     elif argv and argv[0] == "--chaos":
         for line in main_chaos(argv[1:] or None):
+            print(line)
+    elif argv and argv[0] == "--spec":
+        for line in main_spec(argv[1:] or None):
             print(line)
     else:
         for line in main(argv or None):

@@ -26,6 +26,15 @@ the recovery counters next to the pressure stats:
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --arrival burst --requests 12 --chaos --fault-seed 3 \
         --watchdog-deadline 0.1 --checksum-pages
+
+``--spec`` turns on speculative decoding (paged only): an n-gram
+drafter proposes up to ``--spec-k`` tokens from each request's own
+history and one batched verify dispatch scores them all, emitting every
+accepted token — bitwise identical to plain decode, with the acceptance
+rate reported next to the KV stats:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --spec --spec-k 4 --max-new 32
 """
 
 from __future__ import annotations
@@ -97,6 +106,14 @@ def main(argv=None) -> int:
     ap.add_argument("--shed-queue-depth", type=int, default=None,
                     help="admission queue depth beyond which new lowest-"
                          "priority requests are shed (default: never)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding: n-gram self-drafting + one "
+                         "batched verify dispatch per tick (paged only; "
+                         "tokens stay bitwise identical to plain decode)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens proposed per verify dispatch")
+    ap.add_argument("--spec-min-match", type=int, default=2,
+                    help="shortest history n-gram the drafter may match on")
     ap.add_argument("--sample", action="store_true",
                     help="temperature/top-k sampling instead of greedy argmax")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -154,7 +171,9 @@ def main(argv=None) -> int:
                         max_retries=args.max_retries,
                         watchdog_deadline_s=watchdog,
                         checksum_pages=args.checksum_pages,
-                        shed_queue_depth=args.shed_queue_depth),
+                        shed_queue_depth=args.shed_queue_depth,
+                        spec_decode=args.spec, spec_k=args.spec_k,
+                        spec_min_match=args.spec_min_match),
             params, session=session, fault_injector=injector,
         )
         if args.arrival:
@@ -224,6 +243,13 @@ def main(argv=None) -> int:
           f"{pr['evictions_for_preempt']} trie evictions for preempt, "
           f"{pr['cancellations']} cancellations, "
           f"peak queue depth {pr['peak_queue_depth']}")
+    if args.spec:
+        sp = kv["speculation"]
+        print(f"[serve] speculation: acceptance rate {sp['acceptance_rate']} "
+              f"({sp['accepted']}/{sp['drafted']} drafts), "
+              f"{sp['tokens_per_dispatch']} tokens/dispatch over "
+              f"{sp['verify_dispatches']} verify dispatches "
+              f"(mean accepted len {sp['mean_accepted_len']})")
     rec = kv["recovery"]
     print(f"[serve] recovery: {rec['retries']} retries "
           f"({rec['backoff_total_ticks']} backoff ticks), "

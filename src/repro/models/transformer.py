@@ -415,6 +415,7 @@ def prefill(params, batch, cfg, caches, lc: LogicalConstraints = NULL_CONSTRAINT
 def prefill_chunk(
     params, batch, cfg, caches, start, length,
     lc: LogicalConstraints = NULL_CONSTRAINTS, block_tables=None,
+    all_logits: bool = False,
 ):
     """One chunk of an incremental prefill: run ``batch["tokens"]`` (B,C)
     through the stack as positions ``start .. start+length``, writing the
@@ -431,7 +432,15 @@ def prefill_chunk(
     and reads through the paged pool layout (see ``init_cache``) — reads
     go through ``kernels.paged_attention.paged_prefill_attention``, the
     multi-token paged read that attends the block table directly instead
-    of gathering a slot's pages into a dense view per chunk."""
+    of gathering a slot's pages into a dense view per chunk.
+
+    ``all_logits=True`` returns logits at EVERY chunk position, (B,C,V) —
+    the multi-token scoring path for speculative decoding: each row ``r``
+    attends through its own position, so ``logits[:, r]`` is bitwise
+    identical to what a sequential ``decode_step`` at ``start + r`` would
+    produce after consuming the same tokens. Positions past ``length``
+    hold garbage (their cache writes and state advance are masked, their
+    logits are not)."""
     x = _embed_inputs(params, batch, cfg, lc)
     B, C, _ = x.shape
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
@@ -445,6 +454,8 @@ def prefill_chunk(
         block_tables=block_tables,
     )
     x = rmsnorm(x, params["norm_f"]["scale"], cfg.norm_eps, cfg.zero_centered_norm)
+    if all_logits:
+        return _logits(params, x, cfg, lc), new_caches
     x_last = jnp.take_along_axis(
         x, jnp.maximum(length - 1, 0)[:, None, None], axis=1
     )  # (B,1,d)

@@ -4,10 +4,12 @@ from repro.serve.serve import (
     make_prefill_step,
     make_prefill_chunk_step,
     make_serve_decode_step,
+    make_spec_verify_step,
     serve_cache_pspecs,
     BatchScheduler,
     RequestHandle,
 )
+from repro.serve.spec import draft_tokens
 from repro.serve.traffic import (
     TrafficConfig,
     TrafficRequest,
@@ -24,6 +26,7 @@ from repro.serve.faults import (
 __all__ = [
     "ServeConfig", "make_decode_step", "make_prefill_step",
     "make_prefill_chunk_step", "make_serve_decode_step",
+    "make_spec_verify_step", "draft_tokens",
     "serve_cache_pspecs", "BatchScheduler", "RequestHandle",
     "TrafficConfig", "TrafficRequest", "generate_workload", "replay",
     "FaultConfig", "FaultEvent", "FaultInjector", "generate_faults",

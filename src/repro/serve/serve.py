@@ -9,6 +9,7 @@ over their head/inner dims.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -24,6 +25,16 @@ from repro import compat
 from repro.distributed import sharding as SH
 from repro.layers.common import LogicalConstraints
 from repro.models import transformer as T
+from repro.serve.spec import draft_tokens
+
+# the static fields ``_serve_step_fns`` keys its lru cache on — see
+# ServeConfig.step_statics() for what belongs here (and what must not)
+_StepStatics = collections.namedtuple(
+    "_StepStatics",
+    ["paged", "greedy", "temperature", "top_k",
+     "prefix_cache", "prefix_trie_capacity",
+     "spec_decode", "spec_k", "spec_min_match"],
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +134,21 @@ class ServeConfig:
     # a clear rejection instead of unbounded queueing under sustained
     # pressure or fault rate. None = never shed.
     shed_queue_depth: int | None = None
+    # speculative multi-token decoding (opt-in, paged only): each tick a
+    # deterministic prompt-lookup drafter (repro.serve.spec — a pure
+    # function of the request's prompt + emitted tokens, no second model)
+    # proposes up to ``spec_k`` draft tokens, and ONE batched verify
+    # dispatch scores all K+1 positions against the paged KV cache
+    # (the prefill-chunk multi-token path). The longest prefix where
+    # draft == model output is accepted — greedy acceptance is provably
+    # bitwise-identical to step-by-step decode, and sampled acceptance
+    # folds the per-request key at each verified POSITION (the PR 8
+    # stream-purity invariant), so spec on/off never changes a token.
+    # ``spec_min_match`` is the shortest history n-gram the drafter may
+    # match on (shorter = more, lower-confidence drafts).
+    spec_decode: bool = False
+    spec_k: int = 4
+    spec_min_match: int = 2
 
     def __post_init__(self):
         if self.checksum_pages and not (self.paged and self.prefix_cache):
@@ -148,6 +174,34 @@ class ServeConfig:
                 f"preempt_policy must be one of priority|pages|progress|never,"
                 f" got {self.preempt_policy!r}"
             )
+        if self.spec_decode and not self.paged:
+            raise ValueError(
+                "spec_decode=True requires paged=True: the batched verify "
+                "step scores K+1 positions through the paged pool's "
+                "block-table reads, and rollback of rejected positions "
+                "relies on the pool's masked scatter writes"
+            )
+        if self.spec_decode and (self.spec_k < 1 or self.spec_min_match < 1):
+            raise ValueError(
+                f"spec_k ({self.spec_k}) and spec_min_match "
+                f"({self.spec_min_match}) must be >= 1"
+            )
+
+    def step_statics(self) -> "_StepStatics":
+        """The step-function cache key: every field that changes WHICH
+        jitted step functions a scheduler needs or HOW they compute —
+        sampling statics, the prefix-cache knobs (the CoW step only
+        exists for prefix-cached schedulers), and the speculation knobs
+        (the verify step only exists for spec schedulers, and its
+        compiled acceptance math depends on them). Shape-only fields
+        (max_len, batch, num_pages, ...) stay OUT: jit retraces per
+        shape on its own, and excluding them lets A/B benchmark pairs
+        (ample vs tight pool, eos on/off) share compiled traces."""
+        return _StepStatics(
+            self.paged, self.greedy, self.temperature, self.top_k,
+            self.prefix_cache, self.prefix_trie_capacity,
+            self.spec_decode, self.spec_k, self.spec_min_match,
+        )
 
 
 def _cache_path_name(path) -> str:
@@ -407,6 +461,92 @@ def make_prefill_chunk_step(cfg, mesh, *, paged=False, greedy=True,
     return chunk_step_dense
 
 
+def make_spec_verify_step(cfg, mesh, *, greedy=True, temperature=1.0,
+                          top_k=None, two_pass=False):
+    """Batched speculative verify: score K+1 positions per slot in ONE
+    dispatch against the paged KV cache.
+
+    The scoring body IS ``T.prefill_chunk`` (``all_logits=True``): each
+    slot's row carries ``[last_token, draft_1 .. draft_k]`` at positions
+    ``start .. start+length-1``, attends through the block tables with
+    per-row causal/window masking (the ``paged_prefill_attention`` S>1
+    read), and yields the logits a sequential ``decode_step`` would have
+    produced at every one of those positions — so the argmax (greedy) or
+    the position-folded sample (sampled mode; the same
+    ``fold_in(request_key, position)`` stream as sequential decode) at
+    position ``start+i`` is bitwise the token step-by-step decode emits
+    there. Acceptance keeps the longest prefix where draft == output,
+    computed on device (a cumulative product over the match mask), so the
+    host readback is just ``(tokens, accept_len, bad)``.
+
+    Rollback of rejected positions is free under the paged layout: their
+    K/V writes are masked scatters that later (correct) writes at the
+    same positions overwrite, and every read is clipped to the reader's
+    own ``cache_len`` — so the scheduler rolls back by simply not
+    advancing ``pos`` past the accepted prefix.
+
+    ``two_pass=True`` (recurrent/hybrid archs — mamba/xLSTM state has no
+    positional masking and cannot be clamped back): the scoring pass
+    discards its caches, and a second pass over the SAME tokens clamped
+    to the accepted length re-commits — recurrent state then advances
+    over exactly the accepted tokens, and attention K/V holds no stale
+    rejected writes at all. Both passes run inside the one dispatch.
+
+    ``fault_mask`` poisons whole rows ahead of the sentinel exactly like
+    the decode step; ``bad`` is the NaN/Inf sentinel over each row's
+    VALID positions (a poisoned dispatch, or a corrupted page any of the
+    K+1 reads touched)."""
+    lc = LogicalConstraints(mesh, SH.activation_rules(cfg, mesh))
+    sample = functools.partial(
+        _sample_tokens, greedy=greedy, temperature=temperature, top_k=top_k,
+        vocab=cfg.vocab,
+    )
+
+    def verify_step(params, tokens, start, length, caches, block_tables,
+                    rng_keys, fault_mask):
+        """tokens: (B,C) int32 — row r is [last_tok, drafts...] padded;
+        start: (B,) int32 per-slot positions; length: (B,) int32 valid
+        tokens per row (0 = inactive slot: writes masked, state
+        untouched); rng_keys: (B,2); fault_mask: (B,) bool.
+        Returns (out (B,C) int32 — the verified token at each position,
+        accept (B,) int32 — accepted DRAFT count (0..length-1),
+        bad (B,) bool, new_caches)."""
+        B, C = tokens.shape
+        logits, new_caches = T.prefill_chunk(
+            params, {"tokens": tokens}, cfg, caches, start, length, lc,
+            block_tables=block_tables, all_logits=True,
+        )  # (B, C, V)
+        logits = jnp.where(
+            fault_mask[:, None, None], jnp.asarray(jnp.nan, logits.dtype),
+            logits,
+        )
+        offs = jnp.arange(C, dtype=jnp.int32)[None, :]
+        valid = offs < length[:, None]
+        bad = jnp.any(~jnp.all(jnp.isfinite(logits), axis=-1) & valid, axis=1)
+        positions = start[:, None] + offs
+        out = sample(
+            logits.reshape(B * C, -1),
+            jnp.repeat(rng_keys, C, axis=0),
+            positions.reshape(-1),
+        ).reshape(B, C)
+        # longest accepted draft prefix: draft i (= tokens[:, i+1]) is
+        # accepted iff it equals the verified token at position i AND
+        # every earlier draft was accepted (cumprod)
+        match = (out[:, :-1] == tokens[:, 1:]) & (
+            offs[:, : C - 1] < (length - 1)[:, None]
+        )
+        accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        if two_pass:
+            commit = jnp.where(length > 0, jnp.minimum(accept + 1, length), 0)
+            _, new_caches = T.prefill_chunk(
+                params, {"tokens": tokens}, cfg, caches, start, commit, lc,
+                block_tables=block_tables,
+            )
+        return out, accept, bad, new_caches
+
+    return verify_step
+
+
 def make_cow_copy_step():
     """Copy one physical page's K/V rows (every layer, both pools) to a
     fresh page, on device — the copy-on-write half of prefix sharing: the
@@ -445,30 +585,50 @@ def make_encoder_step(cfg, mesh):
 # ---------------------------------------------------------------------------
 
 
-# Bounded: each entry pins a pair of jitted fns with donated-buffer traces
+# Bounded: each entry pins a tuple of jitted fns with donated-buffer traces
 # for the process lifetime, so an unbounded cache grows without limit when
-# tests/benchmarks construct many scheduler configurations. 8 entries cover
-# every concurrent A/B pattern in the repo (paged/dense x sampling x arch);
-# an evicted entry merely recompiles on the next scheduler construction.
-@functools.lru_cache(maxsize=8)
-def _serve_step_fns(cfg, mesh, paged, greedy, temperature, top_k,
-                    prefix_cache=False, prefix_trie_capacity=None):
-    """Shared jitted (decode, prefill-chunk, cow-copy) triple per (cfg,
-    mesh, serve statics): scheduler instances (restarts, A/B benchmark
-    runs) reuse traces instead of paying a fresh compile each. The
-    prefix-cache knobs are part of the key: the copy-on-write page-copy
-    step (and its donated-cache trace) only exists for prefix-cached
-    schedulers, and keying every serving knob keeps one entry per
-    distinct configuration."""
-    kw = dict(paged=paged, greedy=greedy, temperature=temperature, top_k=top_k)
+# tests/benchmarks construct many scheduler configurations. The key is the
+# FULL static tuple (``ServeConfig.step_statics()``) — every knob that
+# changes which step functions exist or how they compute, including the
+# speculation knobs, so two distinct configurations can never collide on
+# one entry (a collision would hand a spec scheduler a triple with no
+# verify step, or a prefix scheduler one with no CoW step). 32 entries
+# cover every concurrent A/B pattern in the repo (paged/dense x sampling x
+# prefix x spec x arch) without thrashing; an evicted entry merely
+# recompiles on the next scheduler construction.
+@functools.lru_cache(maxsize=32)
+def _serve_step_fns(cfg, mesh, statics: _StepStatics):
+    """Shared jitted (decode, prefill-chunk, cow-copy, spec-verify) tuple
+    per (cfg, mesh, full serve statics): scheduler instances (restarts,
+    A/B benchmark runs) reuse traces instead of paying a fresh compile
+    each. ``cow`` is None unless the prefix cache is on; ``verify`` is
+    None unless spec decoding is on (its trace depends on the arch —
+    recurrent/hybrid patterns verify in two passes so state advances
+    over exactly the accepted tokens)."""
+    kw = dict(paged=statics.paged, greedy=statics.greedy,
+              temperature=statics.temperature, top_k=statics.top_k)
     cow = (
         jax.jit(make_cow_copy_step(), donate_argnums=(0,))
-        if paged and prefix_cache else None
+        if statics.paged and statics.prefix_cache else None
     )
+    verify = None
+    if statics.spec_decode:
+        two_pass = any(
+            kind in ("mamba2", "mlstm", "slstm") for kind in cfg.pattern
+        )
+        verify = jax.jit(
+            make_spec_verify_step(
+                cfg, mesh, greedy=statics.greedy,
+                temperature=statics.temperature, top_k=statics.top_k,
+                two_pass=two_pass,
+            ),
+            donate_argnums=(4,),
+        )
     return (
         jax.jit(make_serve_decode_step(cfg, mesh, **kw), donate_argnums=(4,)),
         jax.jit(make_prefill_chunk_step(cfg, mesh, **kw), donate_argnums=(5,)),
         cow,
+        verify,
     )
 
 
@@ -938,9 +1098,20 @@ class BatchScheduler:
         self.session = session if session is not None else PerfSession(
             SessionConfig(app_name="serve", backend="null")
         )
-        decode_fn, prefill_fn, self._cow_copy = _serve_step_fns(
-            cfg, mesh, scfg.paged, scfg.greedy, scfg.temperature, scfg.top_k,
-            scfg.prefix_cache, scfg.prefix_trie_capacity,
+        if scfg.spec_decode:
+            # the verify chunk is spec_k draft tokens + the committed input
+            # token, scored in one multi-token dispatch — it tiles the
+            # recurrent inner chunk under the same rule as prefill chunks
+            for inner in (cfg.ssm.chunk if cfg.ssm else None,
+                          cfg.xlstm.chunk if cfg.xlstm else None):
+                verify_c = scfg.spec_k + 1
+                if inner and verify_c > inner and verify_c % inner:
+                    raise ValueError(
+                        f"spec_k+1={verify_c} (the verify chunk) must be <= "
+                        f"the recurrent chunk {inner} or a multiple of it"
+                    )
+        decode_fn, prefill_fn, self._cow_copy, verify_fn = _serve_step_fns(
+            cfg, mesh, scfg.step_statics(),
         )
         self.decode = self.session.wrap_step(
             decode_fn,
@@ -958,6 +1129,17 @@ class BatchScheduler:
             num_devices=mesh.devices.size,
             observe=lambda out: {"outputs": out[0]},
         )
+        # batched speculative verify shares the decode session region: a
+        # spec tick IS the decode tick, just K+1 tokens wide
+        self.verify = None
+        if verify_fn is not None:
+            self.verify = self.session.wrap_step(
+                verify_fn,
+                region="decode",
+                derive=True,
+                num_devices=mesh.devices.size,
+                observe=lambda out: {"outputs": out[0]},
+            )
         # paged KV: shared pool + per-slot block tables + free-list
         # allocator. Tables are host-authored (numpy, -1 = unallocated) and
         # mirrored to device lazily — one small upload per tick at most,
@@ -1032,6 +1214,12 @@ class BatchScheduler:
         # pending readbacks: (device tokens (n,1), device bad-sentinel (n,),
         # row->request map); flushed in a single device_get
         self._pending: list[tuple[Any, Any, list[dict | None]]] = []
+        # speculative decode: per-slot next input token, host-side. Spec
+        # ticks trade the deferred-readback pipeline for width — the accept
+        # count must reach the host before the next tick can plan drafts,
+        # so each verify dispatch reads back immediately (a few scalars)
+        # and amortizes the sync over up to spec_k+1 tokens.
+        self._last_tok = np.zeros(scfg.batch, np.int32)
         # -- fault injection + recovery state --------------------------
         # ``faults`` is a repro.serve.faults.FaultInjector (or None); the
         # scheduler polls it once per tick and applies due events through
@@ -1082,6 +1270,13 @@ class BatchScheduler:
             # caught at prefix attach, watchdog trips
             "retries": 0, "backoff_total_ticks": 0, "quarantined": 0,
             "shed": 0, "checksum_failures": 0, "watchdog_trips": 0,
+            # speculation accounting (kv_cache_stats()["speculation"]):
+            # drafted/accepted/rejected count DRAFT tokens only (the
+            # committed input token of each verify chunk is not a draft);
+            # spec_emitted counts newly-emitted tokens (excludes resume/
+            # retry replay tokens re-verified through the same dispatches)
+            "spec_dispatches": 0, "spec_drafted": 0, "spec_accepted": 0,
+            "spec_rejected": 0, "spec_emitted": 0,
         }
 
     def submit(self, prompt_tokens, request_id, max_new: int = 32,
@@ -1330,7 +1525,10 @@ class BatchScheduler:
             # nothing to prefill: decode from an empty cache off a constant
             # BOS-like seed; on resume, replay the WHOLE history (the seed
             # token regenerates generated[0], which is discarded)
-            self._seeds[slot] = 0
+            if self.scfg.spec_decode:
+                self._last_tok[slot] = 0
+            else:
+                self._seeds[slot] = 0
             if req["generated"]:
                 self._replay[slot] = list(req["generated"])
             self.active[slot] = req
@@ -1751,17 +1949,36 @@ class BatchScheduler:
     def _ensure_pages(self, slot: int, last_pos: int, req: dict) -> None:
         """Grow ``slot``'s block table so position ``last_pos`` (inclusive)
         is backed by a physical page; no-op when already covered (and in
-        dense mode)."""
+        dense mode).
+
+        Pages are acquired ONE AT A TIME so each gets the full
+        ``_alloc_pages`` escalation (trie eviction, victim preemption)
+        before the next is requested; when the pool runs dry mid-grow —
+        a multi-page speculative accept is the common trigger — the pages
+        already taken are unwound page-by-page (freed, table row restored
+        to -1) before the pressure propagates, so a failed grow can never
+        leak a partial allocation."""
         if self._alloc is None:
             return
         need = last_pos // self.scfg.page_size + 1
         have = len(self._slot_pages[slot])
         if need <= have:
             return
-        new = self._alloc_pages(need - have, req)
-        self._tables[slot, have:need] = new
-        self._slot_pages[slot].extend(new)
-        self._tables_dirty = True
+        added: list[int] = []
+        try:
+            for j in range(have, need):
+                page = self._alloc_pages(1, req)[0]
+                self._tables[slot, j] = page
+                self._slot_pages[slot].append(page)
+                added.append(page)
+                self._tables_dirty = True
+        except _PoolPressure:
+            for page in reversed(added):
+                self._slot_pages[slot].pop()
+                self._tables[slot, len(self._slot_pages[slot])] = -1
+                self._alloc.release([page])
+                self._tables_dirty = True
+            raise
 
     def _attach_prefix(self, slot: int, req) -> int:
         """Map the trie's longest cached prefix of ``req``'s prompt into
@@ -1953,6 +2170,32 @@ class BatchScheduler:
         }
         if self.faults is not None:
             out["recovery"]["injected"] = dict(self.faults.counters)
+        # speculation accounting (always present, like "recovery": stable
+        # artifact shape whether or not spec decoding ran). drafted/
+        # accepted/rejected count drafter proposals only; acceptance_rate
+        # is the fraction of proposals verification kept, and
+        # tokens_per_dispatch is the end-to-end win (1.0 = plain decode)
+        drafted = self.stats["spec_drafted"]
+        dispatches = self.stats["spec_dispatches"]
+        out["speculation"] = {
+            "enabled": self.scfg.spec_decode,
+            "drafted": drafted,
+            "accepted": self.stats["spec_accepted"],
+            "rejected": self.stats["spec_rejected"],
+            "acceptance_rate": (
+                round(self.stats["spec_accepted"] / drafted, 4)
+                if drafted else 0.0
+            ),
+            "mean_accepted_len": (
+                round(self.stats["spec_accepted"] / dispatches, 4)
+                if dispatches else 0.0
+            ),
+            "verify_dispatches": dispatches,
+            "tokens_per_dispatch": (
+                round(self.stats["spec_emitted"] / dispatches, 4)
+                if dispatches else 0.0
+            ),
+        }
         return out
 
     def _dispatch_prefill_chunk(self) -> None:
@@ -2018,9 +2261,33 @@ class BatchScheduler:
                 # again, already on the host — discard it and schedule the
                 # rest of the history for decode replay (inputs forced,
                 # outputs discarded)
-                self._seeds[slot] = req["generated"][0]
+                if self.scfg.spec_decode:
+                    self._last_tok[slot] = req["generated"][0]
+                else:
+                    self._seeds[slot] = req["generated"][0]
                 if len(req["generated"]) > 1:
                     self._replay[slot] = list(req["generated"][1:])
+            elif self.scfg.spec_decode:
+                # spec mode has no deferred-readback pipeline (the accept
+                # count syncs every tick anyway): materialize the first
+                # token here — this is the TTFT point regardless
+                tok_h, bad_h = jax.device_get([next_tok, bad])
+                self.stats["readbacks"] += 1
+                if bool(bad_h[0]):
+                    # poisoned prefill: nothing was emitted — retry from
+                    # the (empty) clean history via the standard path
+                    self._fault_nan_inflight.discard(req["id"])
+                    self._fault_retry(req)
+                    return
+                req["generated"].append(int(tok_h[0]))
+                self._last_tok[slot] = int(tok_h[0])
+                eos = self.scfg.eos_id
+                if req["max_new"] <= 1 or (
+                        eos is not None and int(tok_h[0]) == eos):
+                    req["_status"] = "done"
+                    self.completed.append(req)
+                    self.active[slot] = None
+                    self._release_slot_pages(slot)
             else:
                 req["_pending"] += 1
                 self._pending.append(
@@ -2154,6 +2421,173 @@ class BatchScheduler:
                 self._alloc.release(pages)
             self._spike_holds = []
 
+    # -- speculative decode (draft + batched verify) ---------------------
+
+    def _plan_drafts(self) -> dict[int, dict]:
+        """Per decoding slot, the draft window for this tick's verify
+        dispatch. Recompute-resume/retry replay tokens come FIRST — they
+        are true history, so verification accepts them bitwise and replay
+        rides the speculative path at up to ``spec_k+1`` tokens per
+        dispatch instead of one. Fresh proposals from the n-gram drafter
+        are only appended once the replay queue fits entirely in the
+        window (the drafter's input is the full history, which ends at
+        the replay queue's end). The drafter budget is clamped so
+        accepted-and-emitted tokens can never exceed the request's
+        ``max_new`` (at most ``n_draft + 1`` new emissions per dispatch)
+        and the deepest K/V write stays at ``max_len - 1`` (a deeper
+        write would be silently dropped by the masked scatter)."""
+        K = self.scfg.spec_k
+        plans: dict[int, dict] = {}
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            replay = self._replay.get(slot, [])
+            drafts = [int(t) for t in replay[:K]]
+            n_replay = len(drafts)
+            n_draft = 0
+            if n_replay == len(replay):
+                remaining = req["max_new"] - len(req["generated"])
+                budget = min(
+                    K - n_replay,
+                    max(remaining - 1, 0),
+                    max(self.scfg.max_len - 1 - int(self.pos[slot])
+                        - n_replay, 0),
+                )
+                if budget > 0:
+                    drafts += draft_tokens(
+                        req["prompt"] + req["generated"], budget,
+                        min_match=self.scfg.spec_min_match,
+                    )
+                    n_draft = len(drafts) - n_replay
+            plans[slot] = {
+                "drafts": drafts, "n_replay": n_replay, "n_draft": n_draft,
+            }
+        return plans
+
+    def _spec_tick(self, chunks_at_tick_start: int) -> None:
+        """The speculative replacement for the one-token decode dispatch:
+        plan per-slot draft windows, back every window with physical pages
+        (multi-page accepts cross page boundaries — ``_ensure_pages``
+        unwinds page-by-page on pool pressure), then score all windows in
+        ONE batched verify dispatch and commit each slot's longest
+        accepted prefix. Rejected positions need no KV rollback: their
+        writes are masked scatters that the next dispatch overwrites at
+        the same positions before any read can see them — rollback is
+        simply not advancing ``pos``. The accept counts must reach the
+        host before the next tick can draft, so the dispatch reads back
+        immediately (a few small arrays), amortized over up to
+        ``spec_k+1`` tokens."""
+        plans = self._plan_drafts()
+        if self.scfg.paged:
+            for slot, plan in plans.items():
+                req = self.active[slot]
+                if req is None:
+                    continue  # a pressure round below evicted this slot
+                try:
+                    self._ensure_pages(
+                        slot, int(self.pos[slot]) + len(plan["drafts"]), req
+                    )
+                except _PoolPressure as e:
+                    self._handle_pressure(slot, e)
+        decoding = list(self.active)
+        plans = {s: p for s, p in plans.items() if decoding[s] is not None}
+        if bool(self._prefills) and plans:
+            self.stats["overlap_ticks"] += 1
+        if not plans:
+            return
+        B, C = self.scfg.batch, self.scfg.spec_k + 1
+        chunk = np.zeros((B, C), np.int32)
+        length = np.zeros(B, np.int32)
+        for slot, plan in plans.items():
+            drafts = plan["drafts"]
+            chunk[slot, 0] = self._last_tok[slot]
+            chunk[slot, 1:1 + len(drafts)] = drafts
+            length[slot] = 1 + len(drafts)
+        pos_now = jnp.asarray(self.pos.copy())
+        fault_mask = self._fault_mask_zero
+        if self._fault_nan_slots:
+            m = np.zeros(self.scfg.batch, bool)
+            m[list(self._fault_nan_slots)] = True
+            for s in self._fault_nan_slots:
+                if decoding[s] is not None:
+                    self._fault_nan_inflight.add(decoding[s]["id"])
+            self._fault_nan_slots.clear()
+            fault_mask = jnp.asarray(m)
+        t0 = time.perf_counter()
+        if self._hang_pending:
+            time.sleep(self._hang_pending)
+            self._hang_pending = 0.0
+        out_dev, acc_dev, bad_dev, self.caches = self.verify(
+            self.params, jnp.asarray(chunk), pos_now,
+            jnp.asarray(length), self.caches, self._tables_device(),
+            self.rng_keys, fault_mask,
+        )
+        dispatch_s = time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        self.stats["spec_dispatches"] += 1
+        if self.stats["prefill_chunks"] > chunks_at_tick_start:
+            self.stats["decode_after_prefill_ticks"] += 1
+        out, acc, bad = jax.device_get([out_dev, acc_dev, bad_dev])
+        self.stats["readbacks"] += 1
+        poisoned: list[dict] = []
+        eos = self.scfg.eos_id
+        for slot, plan in plans.items():
+            req = decoding[slot]
+            if bool(bad[slot]):
+                # poisoned verify: nothing committed for this slot (pos
+                # untouched, replay queue untouched) — the whole window
+                # recomputes after the retry
+                self._fault_nan_inflight.discard(req["id"])
+                if not req["_cancelled"]:
+                    poisoned.append(req)
+                continue
+            n_acc = int(acc[slot])
+            emitted = [int(t) for t in out[slot, : n_acc + 1]]
+            self.pos[slot] += n_acc + 1
+            self._last_tok[slot] = emitted[-1]
+            acc_draft = max(0, n_acc - plan["n_replay"])
+            self.stats["spec_drafted"] += plan["n_draft"]
+            self.stats["spec_accepted"] += acc_draft
+            self.stats["spec_rejected"] += plan["n_draft"] - acc_draft
+            # replay outputs are tokens already in ``generated`` — pop
+            # them off the queue instead of double-counting
+            new_toks = emitted
+            if slot in self._replay:
+                hist = self._replay[slot]
+                n_hist = min(len(hist), len(emitted))
+                del hist[:n_hist]
+                if not hist:
+                    del self._replay[slot]
+                new_toks = emitted[n_hist:]
+            if req["_cancelled"]:
+                continue
+            req["generated"].extend(new_toks)
+            self.stats["spec_emitted"] += len(new_toks)
+            done = len(req["generated"]) >= req["max_new"]
+            if eos is not None and eos in req["generated"]:
+                # EOS inside the accepted window: truncate right after it
+                req["generated"] = (
+                    req["generated"][: req["generated"].index(eos) + 1]
+                )
+                done = True
+            if done:
+                req["_status"] = "done"
+                self.completed.append(req)
+                self.active[slot] = None
+                self._release_slot_pages(slot)
+                self._replay.pop(slot, None)
+        if (self.scfg.watchdog_deadline_s is not None
+                and dispatch_s > self.scfg.watchdog_deadline_s):
+            self.stats["watchdog_trips"] += 1
+            self.session.event("recovery")
+            victim, self._hang_slot = self._hang_slot, None
+            req = self.active[victim] if victim is not None else None
+            if req is not None and req["_status"] not in _TERMINAL:
+                self._fault_retry(req)
+        for req in poisoned:
+            if req["_status"] not in _TERMINAL:
+                self._fault_retry(req)
+
     # -- the tick --------------------------------------------------------
 
     def step(self) -> int:
@@ -2175,7 +2609,13 @@ class BatchScheduler:
                     jax.block_until_ready(self.tokens)
             else:
                 self._apply_seeds()  # seeds collected since last tick
-            if self.scfg.paged:
+            if self.scfg.spec_decode:
+                # speculative tick: draft windows + ONE batched verify
+                # replace the one-token decode dispatch entirely (page
+                # ensuring moves inside — the window's extent is per-plan)
+                self._spec_tick(chunks_at_tick_start)
+                decoding: list[dict | None] = [None] * self.scfg.batch
+            elif self.scfg.paged:
                 # this step writes each active slot's K/V at pos[slot]: back
                 # any page boundary being crossed BEFORE snapshotting the
                 # active set — pool pressure here can preempt (remove) a
@@ -2187,7 +2627,8 @@ class BatchScheduler:
                             self._ensure_pages(slot, int(self.pos[slot]), req)
                         except _PoolPressure as e:
                             self._handle_pressure(slot, e)
-            decoding = list(self.active)
+            if not self.scfg.spec_decode:
+                decoding = list(self.active)
             if bool(self._prefills) and any(r is not None for r in decoding):
                 self.stats["overlap_ticks"] += 1
             if any(r is not None for r in decoding):
